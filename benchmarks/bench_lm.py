@@ -1,0 +1,80 @@
+"""LM-side microbenchmarks: wall time of the reduced-config train/decode
+steps on CPU (sanity + regression tracking for the model stack), plus the
+kernel-vs-ref walk step throughput."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def lm_steps() -> list[str]:
+    from repro.configs import ARCH_IDS, reduced_config
+    from repro.models import model_init
+    from repro.optim import OptConfig, adamw_init
+    from repro.train import make_train_step
+
+    rows = []
+    B, S = 2, 32
+    for arch in ("llama3.2-1b", "mamba2-2.7b", "mixtral-8x22b",
+                 "recurrentgemma-2b", "deepseek-v2-236b"):
+        cfg = reduced_config(arch)
+        rng = np.random.default_rng(0)
+        params = model_init(jax.random.PRNGKey(0), cfg)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)),
+        }
+        if cfg.frontend == "vision":
+            batch["prefix"] = jnp.zeros((B, cfg.num_prefix, cfg.d_model))
+        step = jax.jit(make_train_step(cfg, OptConfig()))
+        opt = adamw_init(params)
+        dt = _time(lambda p, o, b: step(p, o, b)[2]["loss"], params, opt, batch)
+        tok_s = B * S / dt
+        rows.append(f"lm_train_{arch},{dt*1e6:.1f},tokens_per_s={tok_s:.0f}")
+    return rows
+
+
+def walk_kernel_throughput() -> list[str]:
+    from repro.core import erdos_renyi, partition_into_n_blocks
+    from repro.kernels import node2vec_step
+
+    g = erdos_renyi(2000, 16000, seed=0)
+    bg = partition_into_n_blocks(g, 4)
+    a, b = bg.materialize_block(0), bg.materialize_block(2)
+    pair = (
+        jnp.array([a.start, b.start], jnp.int32),
+        jnp.array([a.nverts, b.nverts], jnp.int32),
+        jnp.stack([jnp.asarray(a.indptr), jnp.asarray(b.indptr)]),
+        jnp.stack([jnp.asarray(a.indices), jnp.asarray(b.indices)]),
+        jnp.zeros((2, bg.max_block_edges), jnp.int32),
+        jnp.ones((2, bg.max_block_edges), jnp.float32),
+    )
+    rng = np.random.default_rng(0)
+    n = 4096
+    cur = jnp.asarray(rng.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32))
+    prev = jnp.asarray(rng.integers(bg.block_starts[2], bg.block_starts[3], n).astype(np.int32))
+    hop = jnp.ones(n, jnp.int32)
+    active = jnp.ones(n, bool)
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for use_kernel, name in ((True, "pallas_interpret"), (False, "jnp_ref")):
+        fn = lambda: node2vec_step(*pair, prev, cur, hop, active, key,
+                                   use_kernel=use_kernel, interpret=True)[0]
+        dt = _time(lambda: fn())
+        rows.append(
+            f"walk_step_{name},{dt*1e6:.1f},steps_per_s={n/dt:.0f}"
+        )
+    return rows

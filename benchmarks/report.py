@@ -1,0 +1,80 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from
+dryrun_results/{summary,roofline}.json."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}" if s is not None else "-"
+
+
+def main(out_path=None):
+    summary = json.loads((ROOT / "dryrun_results" / "summary.json").read_text())
+    roofline = json.loads((ROOT / "dryrun_results" / "roofline.json").read_text())
+
+    lines = []
+    lines.append("### Dry-run grid (compile + memory per device)\n")
+    lines.append(
+        "| arch | shape | mesh | compile s | args/dev | temp/dev | "
+        "flops/dev (cost_analysis, scan-body-once) | AG/AR/RS/A2A/CP |"
+    )
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for cid, rec in sorted(summary.items()):
+        if rec.get("skipped"):
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | - | SKIP | - | - | - | "
+                f"{rec['reason']} |"
+            )
+            continue
+        if not rec.get("ok"):
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ? | FAIL | - | - | - | {rec.get('error','')[:60]} |")
+            continue
+        b = rec["bytes_per_device"]
+        c = rec["collectives"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rec['compile_s']} | {fmt_bytes(b['arguments'])} | "
+            f"{fmt_bytes(b['temp'])} | {rec['cost_analysis']['flops']:.3g} | "
+            f"{c['all-gather']}/{c['all-reduce']}/{c['reduce-scatter']}/"
+            f"{c['all-to-all']}/{c['collective-permute']} |"
+        )
+
+    lines.append("\n### Roofline (per chip, v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    lines.append(
+        "| cell | compute ms | memory ms | collective ms | dominant | "
+        "bound ms | roofline frac | MODEL_FLOPS/HLO |"
+    )
+    lines.append("|---|---|---|---|---|---|---|---|")
+    for cid, t in sorted(roofline.items()):
+        lines.append(
+            f"| {cid} | {fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} | "
+            f"{fmt_ms(t['collective_s'])} | {t['dominant']} | "
+            f"{fmt_ms(t['step_lower_bound_s'])} | "
+            f"{t['roofline_fraction']:.3f} | {t['useful_fraction']:.2f} |"
+        )
+    text = "\n".join(lines) + "\n"
+    if out_path:
+        Path(out_path).write_text(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

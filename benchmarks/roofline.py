@@ -1,0 +1,477 @@
+"""Roofline analysis from compiled dry-run HLO (deliverable g).
+
+`compiled.cost_analysis()` on this JAX/XLA build reports per-device totals
+but counts every `while` (scan) body ONCE — useless for scanned layer
+stacks.  This module parses the optimized post-SPMD HLO text instead:
+
+  * per-computation symbol tables (instruction -> dtype/shape),
+  * dot FLOPs from result shape x contracted dims (lhs shape),
+  * collective bytes with ring-algorithm multipliers and replica-group
+    sizes parsed from the op,
+  * memory-traffic proxy: bytes crossing fusion boundaries (fusion/dot/
+    custom-call operands + outputs — the materialisation points),
+  * `while` bodies multiplied by their trip count, which XLA leaves as the
+    inline `constant(N)` in each loop condition (verified on this build);
+    nested loops multiply through the call chain.
+
+Terms (v5e): compute = FLOPs / 197e12, memory = bytes / 819e9,
+collective = bytes / 50e9 — all per chip, seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "parse_hlo", "analyze_hlo", "roofline_terms", "model_flops"]
+
+HW = {
+    "flops_bf16": 197e12,  # TPU v5e peak bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# type may be a tuple containing `/*index=N*/` comments; opcode is the first
+# bare `word(` token after the type (no parens occur inside type strings)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^\n]*\))?\s*->[^\n]*\{\s*$|^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^\n]*\)\s*\{\s*$",
+    re.M,
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # operand names up to the closing paren of the op
+        depth = 0
+        end = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        args = self.rest[:end]
+        return re.findall(r"%([\w.\-]+)", args)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+    def table(self) -> Dict[str, str]:
+        return {i.name: i.type_str for i in self.instrs}
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            # computation header: "%name (params) -> type {" or "ENTRY ..."
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                current = Computation(m.group(1), [])
+                comps[current.name] = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            current.instrs.append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _dot_flops(instr: Instr, table: Dict[str, str]) -> float:
+    out_dims = _shape_dims(instr.type_str) or []
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    ops = instr.operands()
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if m and ops:
+        lhs_dims = _shape_dims(table.get(ops[0], "")) or []
+        for idx in (int(x) for x in m.group(1).split(",") if x):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * out_n * contract
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.mem_bytes += o.mem_bytes
+        self.coll_bytes += o.coll_bytes
+        for k, v in o.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(
+            self.flops * f, self.mem_bytes * f, self.coll_bytes * f,
+            {k: v * f for k, v in self.coll_by_op.items()},
+        )
+
+
+def _fusion_read_bytes(fc: Computation, instr: Instr, table: Dict[str, str]) -> int:
+    """Bytes a fusion actually reads: parameters consumed only through
+    dynamic-slice count as the slice size, not the full operand (scan
+    bodies address stacked [L, ...] arrays this way)."""
+    operands = instr.operands()
+    # parameter index -> slice-only read size
+    param_instrs = [i for i in fc.instrs if i.opcode == "parameter"]
+    users: Dict[str, List[Instr]] = {p.name: [] for p in param_instrs}
+    for i in fc.instrs:
+        for o in i.operands():
+            if o in users:
+                users[o].append(i)
+    total = 0
+    for p in param_instrs:
+        mm = re.match(r"(\d+)\)", p.rest)
+        idx = int(mm.group(1)) if mm else None
+        full = _shape_bytes(p.type_str)
+        if idx is not None and idx < len(operands):
+            full = _shape_bytes(table.get(operands[idx], p.type_str)) or full
+        uses = users.get(p.name, [])
+        if uses and all(u.opcode == "dynamic-slice" for u in uses):
+            total += sum(_shape_bytes(u.type_str) for u in uses)
+        else:
+            total += full
+    return total
+
+
+def _convert_factor(
+    instr: Instr, comp: Computation, comps: Dict[str, Computation]
+) -> float:
+    """If this collective's operand is an upcast (convert bf16->f32, either
+    bare or as a convert-only fusion), return the byte ratio (<1) of the
+    logical dtype — undoing the XLA:CPU f32-dot-upcast artifact."""
+    instr_by_name = {i.name: i for i in comp.instrs}
+    ops = instr.operands()
+    if not ops:
+        return 1.0
+    src = instr_by_name.get(ops[0])
+    if src is None:
+        return 1.0
+    out_dt = _SHAPE_RE.search(src.type_str or instr.type_str)
+    out_bytes = _DTYPE_BYTES.get(out_dt.group(1), 4) if out_dt else 4
+    in_bytes = None
+    if src.opcode == "convert":
+        inner = instr_by_name.get(src.operands()[0]) if src.operands() else None
+        if inner is not None:
+            m = _SHAPE_RE.search(inner.type_str)
+            if m:
+                in_bytes = _DTYPE_BYTES.get(m.group(1))
+    elif src.opcode == "fusion" and "convert" in src.name:
+        m = re.search(r"calls=%([\w.\-]+)", src.rest)
+        fc = comps.get(m.group(1)) if m else None
+        if fc is not None:
+            big = []
+            for p in fc.instrs:
+                if p.opcode != "parameter":
+                    continue
+                sm = _SHAPE_RE.search(p.type_str)
+                if sm and len(_shape_dims(p.type_str) or []) >= 2:
+                    big.append(_DTYPE_BYTES.get(sm.group(1), 4))
+            if big:
+                in_bytes = min(big)
+    if in_bytes and in_bytes < out_bytes:
+        return in_bytes / out_bytes
+    # hoisted-convert case: XLA:CPU converts the stacked bf16 weights to f32
+    # once outside the loop and gathers f32 inside.  Any f32 collective whose
+    # op_name attributes it to a dot_general would be bf16 on TPU (MXU dots
+    # take bf16 operands natively).
+    if out_bytes == 4 and "dot_general" in instr.rest:
+        return 0.5
+    return 1.0
+
+
+def _trip_count(cond: Computation) -> int:
+    """XLA leaves the loop bound as an inline constant in the condition."""
+    consts = []
+    for i in cond.instrs:
+        if i.opcode == "constant":
+            m = re.match(r"(\d+)\)", i.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _comp_cost(
+    comp: Computation, comps: Dict[str, Computation], memo: Dict[str, Cost],
+    n_devices: int,
+) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = Cost()  # cycle guard
+    total = Cost()
+    table = comp.table()
+    instr_by_name = {i.name: i for i in comp.instrs}
+    # convert-only fusions feeding dots are fused away on TPU (bf16 operands
+    # go straight to the MXU): absorb them into the dot's operand read at the
+    # pre-convert dtype and don't count the fusion itself.
+    absorbed: set = set()
+    for instr in comp.instrs:
+        if instr.opcode != "dot":
+            continue
+        for o in instr.operands():
+            src = instr_by_name.get(o)
+            if src is not None and src.opcode == "fusion" and "convert" in src.name:
+                absorbed.add(o)
+    for instr in comp.instrs:
+        op = instr.opcode
+        if op == "dot":
+            total.flops += _dot_flops(instr, table)
+            out_b = _shape_bytes(instr.type_str)
+            in_b = 0
+            for o in instr.operands():
+                b = _shape_bytes(table.get(o, ""))
+                if o in absorbed:
+                    src = instr_by_name[o]
+                    m = re.search(r"calls=%([\w.\-]+)", src.rest)
+                    fc = comps.get(m.group(1)) if m else None
+                    if fc is not None:
+                        small = [
+                            _DTYPE_BYTES.get(_SHAPE_RE.search(p.type_str).group(1), 4)
+                            for p in fc.instrs
+                            if p.opcode == "parameter" and _SHAPE_RE.search(p.type_str)
+                        ]
+                        out_dt = _SHAPE_RE.search(src.type_str)
+                        ob = _DTYPE_BYTES.get(out_dt.group(1), 4) if out_dt else 4
+                        if small and min(small) < ob:
+                            b = b * min(small) // ob
+                in_b += b
+            total.mem_bytes += out_b + in_b
+        elif op == "convolution":
+            # rough: 2 * out * (kernel spatial x in-ch) — none of our archs
+            total.flops += 2.0 * _shape_bytes(instr.type_str)
+        elif any(op.startswith(c) for c in _COLLECTIVES):
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue  # counted at -start
+            nbytes = _shape_bytes(instr.type_str)
+            in_bytes = sum(_shape_bytes(table.get(o, "")) for o in instr.operands())
+            # XLA:CPU upcasts bf16 dot operands to f32 BEFORE the SPMD
+            # all-gathers; a TPU compile gathers bf16.  Detect the
+            # convert-producing operand and count logical (pre-convert) bytes.
+            f = _convert_factor(instr, comp, comps)
+            nbytes *= f
+            in_bytes *= f
+            g = _group_size(instr.rest, n_devices)
+            if base == "all-gather":
+                c = nbytes * (g - 1) / max(g, 1)
+            elif base == "all-reduce":
+                c = 2.0 * nbytes * (g - 1) / max(g, 1)
+            elif base == "reduce-scatter":
+                c = in_bytes * (g - 1) / max(g, 1)
+            elif base == "all-to-all":
+                c = nbytes * (g - 1) / max(g, 1)
+            else:  # collective-permute
+                c = nbytes
+            total.coll_bytes += c
+            total.coll_by_op[base] = total.coll_by_op.get(base, 0.0) + c
+        elif op == "fusion":
+            if instr.name in absorbed:
+                continue
+            m = re.search(r"calls=%([\w.\-]+)", instr.rest)
+            fc = comps.get(m.group(1)) if m else None
+            if "dynamic-update-slice" in instr.name:
+                # in-place stash update: traffic = the updated slice (twice:
+                # read-modify-write), never the whole aliased buffer
+                op_bytes = sorted(
+                    _shape_bytes(table.get(o, "")) for o in instr.operands()
+                )
+                total.mem_bytes += 2 * sum(op_bytes[:-1]) if op_bytes else 0
+            elif fc is not None:
+                in_b = _fusion_read_bytes(fc, instr, table)
+                total.mem_bytes += _shape_bytes(instr.type_str) + in_b
+            else:
+                in_b = sum(_shape_bytes(table.get(o, "")) for o in instr.operands())
+                total.mem_bytes += _shape_bytes(instr.type_str) + in_b
+            if fc is not None:
+                total += _comp_cost(fc, comps, memo, n_devices)
+        elif op == "dynamic-update-slice":
+            op_bytes = sorted(
+                _shape_bytes(table.get(o, "")) for o in instr.operands()
+            )
+            total.mem_bytes += 2 * sum(op_bytes[:-1]) if op_bytes else 0
+        elif op in ("custom-call", "copy", "scatter",
+                    "gather", "dynamic-slice", "sort"):
+            total.mem_bytes += _shape_bytes(instr.type_str)
+        elif op == "while":
+            m = re.search(r"condition=%([\w.\-]+), body=%([\w.\-]+)", instr.rest)
+            if m:
+                cond_name, body_name = m.group(1), m.group(2)
+                trips = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                body = comps.get(body_name)
+                if body is not None:
+                    total += _comp_cost(body, comps, memo, n_devices).scaled(trips)
+        elif op in ("call", "conditional"):
+            for m in re.finditer(
+                r"(?:to_apply|branch_computations=\{?|true_computation|false_computation)=?%([\w.\-]+)",
+                instr.rest,
+            ):
+                if m.group(1) in comps:
+                    total += _comp_cost(comps[m.group(1)], comps, memo, n_devices)
+    memo[comp.name] = total
+    return total
+
+
+def analyze_hlo(text: str, *, n_devices: int, entry: Optional[str] = None) -> Cost:
+    comps = parse_hlo(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: Dict[str, Cost] = {}
+    return _comp_cost(comps[entry], comps, memo, n_devices)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+def roofline_terms(cost: Cost) -> dict:
+    t_c = cost.flops / HW["flops_bf16"]
+    t_m = cost.mem_bytes / HW["hbm_bw"]
+    t_x = cost.coll_bytes / HW["ici_bw"]
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+        "flops": cost.flops,
+        "mem_bytes": cost.mem_bytes,
+        "coll_bytes": cost.coll_bytes,
+        "coll_by_op": cost.coll_by_op,
+    }
+
+
+def model_flops(cfg, shape, *, n_devices: int) -> float:
+    """Per-device MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N*B decode
+    (N = active params)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    return 2.0 * n_active * shape.global_batch / n_devices
+
+
+def main():  # pragma: no cover - CLI
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("summary", nargs="?",
+                    default=str(Path(__file__).resolve().parents[1]
+                                / "dryrun_results" / "summary.json"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    import sys
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    from repro.configs import SHAPES, get_config
+
+    summary = json.loads(Path(args.summary).read_text())
+    rows = {}
+    for cid, rec in summary.items():
+        if not rec.get("ok") or "hlo_path" not in rec:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        cost = analyze_hlo(Path(rec["hlo_path"]).read_text(),
+                           n_devices=rec["devices"])
+        terms = roofline_terms(cost)
+        mf = model_flops(cfg, shape, n_devices=rec["devices"])
+        terms["model_flops"] = mf
+        terms["useful_fraction"] = mf / cost.flops if cost.flops else 0.0
+        rows[cid] = terms
+        print(
+            f"{cid:45s} comp={terms['compute_s']*1e3:9.2f}ms "
+            f"mem={terms['memory_s']*1e3:9.2f}ms coll={terms['collective_s']*1e3:9.2f}ms "
+            f"dom={terms['dominant']:10s} useful={terms['useful_fraction']:.2f}"
+        )
+    if args.out:
+        Path(args.out).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

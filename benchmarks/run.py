@@ -1,0 +1,32 @@
+"""Benchmark entry point: ``python -m benchmarks.run [names...]``.
+
+Prints ``name,us_per_call,derived`` CSV (one row per paper-table entry).
+Env: BENCH_SCALE=0.5 shrinks the graphs for quick runs.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import bench_lm, bench_walks
+
+    wanted = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    for name, fn in bench_walks.ALL.items():
+        if wanted and name not in wanted:
+            continue
+        for row in fn():
+            print(row, flush=True)
+    if not wanted or "lm" in wanted:
+        for row in bench_lm.walk_kernel_throughput():
+            print(row, flush=True)
+        for row in bench_lm.lm_steps():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Second-order PageRank queries (PRNV, Wu et al. 2016) with GraSorw.
+
+Runs walk-with-restart queries for several seed vertices under different
+Node2vec (p, q) settings — the paper's §7.6.1 sensitivity axis — and
+compares the bi-block engine against the in-memory oracle.
+
+    PYTHONPATH=src python examples/pagerank_query.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import (
+    BiBlockEngine,
+    InMemoryWalker,
+    barabasi_albert,
+    partition_into_n_blocks,
+    prnv_task,
+)
+
+
+def main():
+    g = barabasi_albert(3000, 6, seed=0)
+    bg = partition_into_n_blocks(g, 5)
+    queries = [0, 17, 256]
+    for p, q in ((1.0, 1.0), (4.0, 0.25), (0.25, 4.0)):
+        print(f"\n=== Node2vec(p={p}, q={q}) ===")
+        for v in queries:
+            task = prnv_task(v, g.num_vertices, p=p, q=q, samples_per_vertex=2)
+            res = BiBlockEngine(bg, task).run()
+            oracle = InMemoryWalker(bg, task).run(record_walks=False)
+            ppr = res.ppr_estimate()
+            top = np.argsort(-ppr)[:5]
+            tv = 0.5 * np.abs(ppr - oracle.ppr_estimate()).sum()
+            print(f"  query {v:5d}: top5={[int(t) for t in top]}  "
+                  f"sim_wall={res.stats.sim_wall_time*1e3:.1f} ms  "
+                  f"TV(engine, oracle)={tv:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""GraSorw-JAX: I/O-efficient second-order random walks (the paper) +
+a multi-pod LM training/serving framework that consumes them.
+
+Subpackages: core (the paper's system), kernels (Pallas TPU), models,
+sharding, optim, train, data, checkpoint, runtime, configs, launch.
+"""
+
+__version__ = "0.1.0"

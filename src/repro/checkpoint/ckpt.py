@@ -1,0 +1,181 @@
+"""Sharded checkpointing with atomic manifest commit + async writes.
+
+Layout (one directory per step):
+
+    <dir>/step_000120/
+        manifest.json       # tree structure, shapes, dtypes, data cursor,
+                            # mesh shape it was saved under, rng state
+        arrays/<leaf-id>.npy
+
+Design points for 1000+-node deployments (scaled to this container):
+  * per-host shard writes — each host serialises only the addressable
+    shards of its local devices (here: the single host writes everything,
+    through the same code path, via ``jax.device_get`` per leaf);
+  * atomic commit — arrays land in a tmp dir, the manifest is written last
+    and the dir is renamed; a crash mid-write never yields a readable-but-
+    corrupt checkpoint (restore scans for the latest *committed* step);
+  * async — writes happen on a background thread so the train loop only
+    blocks on the previous save (double-buffering), mirroring how real
+    fleets hide checkpoint latency behind compute;
+  * elastic restore — arrays are saved unsharded-logical (device_get), so
+    a restore may target ANY mesh: the restore path re-device_puts against
+    the new NamedShardings (resharding = the restore-time all-gather that
+    elastic scaling requires).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            getattr(p, "key", getattr(p, "idx", getattr(p, "name", str(p))))
+            if not isinstance(p, jax.tree_util.SequenceKey)
+            else str(p.idx)
+            for p in path
+        )
+        key = key.replace("'", "")
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree,
+    *,
+    extra: Optional[dict] = None,
+) -> Path:
+    """Synchronous save with atomic commit. Returns the committed path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+    flat = _flatten(tree)
+    meta = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(getattr(leaf, "dtype", arr.dtype))
+        if arr.dtype.kind == "V" or logical == "bfloat16":
+            # numpy has no native bfloat16: persist the raw 2-byte lanes
+            arr = arr.view(np.uint16)
+            logical = "bfloat16"
+        np.save(tmp / "arrays" / f"{i}.npy", arr)
+        meta[key] = {"file": f"{i}.npy", "shape": list(arr.shape),
+                     "dtype": logical}
+    manifest = {"step": step, "arrays": meta, "extra": extra or {}}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.glob("step_*"):
+        if (p / "manifest.json").exists():  # committed only
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    tree_like,
+    *,
+    step: Optional[int] = None,
+    shardings=None,
+) -> Tuple[Any, dict]:
+    """Restore into the structure of ``tree_like``; reshard if given
+    ``shardings`` (a matching pytree of NamedSharding) — this is the elastic
+    path: the target mesh may differ from the save-time mesh."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    src = directory / f"step_{step:09d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    flat_like = _flatten(tree_like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    restored = {}
+    for key, info in manifest["arrays"].items():
+        if key not in flat_like:
+            continue
+        arr = np.load(src / "arrays" / info["file"])
+        if info["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if shardings is not None and key in flat_sh:
+            restored[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            restored[key] = jax.numpy.asarray(arr)
+    # rebuild the pytree in tree_like's structure
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    keys = list(_flatten(tree_like).keys())
+    leaves = []
+    for k, (_path, leaf) in zip(keys, flat):
+        leaves.append(restored.get(k, leaf))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+class CheckpointManager:
+    """Async double-buffered writer + retention."""
+
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree, *, extra: Optional[dict] = None):
+        self.wait()  # block on the previous save only
+        tree = jax.tree.map(jax.device_get, tree)  # snapshot now
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, tree, extra=extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1])
+            for p in self.directory.glob("step_*")
+            if (p / "manifest.json").exists()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:09d}", ignore_errors=True)

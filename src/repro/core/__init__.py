@@ -1,0 +1,60 @@
+"""GraSorw core: I/O-efficient second-order random walks (the paper's system)."""
+
+from .buckets import (
+    bucket_ids,
+    skewed_block_assignment,
+    split_into_buckets,
+    traditional_block_assignment,
+)
+from .engine import (
+    BiBlockEngine,
+    InMemoryWalker,
+    PlainBucketEngine,
+    SOGWEngine,
+    WalkResult,
+    advance_pair,
+)
+from .generators import (
+    barabasi_albert,
+    circulant_graph,
+    erdos_renyi,
+    rmat,
+    stochastic_block_model,
+)
+from .graph import BlockedGraph, CSRGraph, ResidentBlock, block_of
+from .loader import BlockLoadingModel, LinearCostModel
+from .partition import (
+    greedy_locality_partition,
+    partition_into_n_blocks,
+    sequential_partition,
+)
+from .scheduler import (
+    make_scheduler,
+    standard_block_io_bound,
+    triangular_block_io_bound,
+    triangular_pairs,
+)
+from .stats import HBM_V5E, ICI_V5E, SSD, DevicePreset, IOStats
+from .transition import (
+    DeepWalk,
+    Node2vec,
+    WalkTask,
+    deepwalk_task,
+    prnv_task,
+    rwnv_task,
+)
+from .walk import WALK_BYTES, WalkBatch, pack_walks, unpack_walks
+
+__all__ = [
+    "BiBlockEngine", "InMemoryWalker", "PlainBucketEngine", "SOGWEngine",
+    "WalkResult", "advance_pair", "BlockedGraph", "CSRGraph", "ResidentBlock",
+    "block_of", "BlockLoadingModel", "LinearCostModel",
+    "greedy_locality_partition", "partition_into_n_blocks",
+    "sequential_partition", "make_scheduler", "standard_block_io_bound",
+    "triangular_block_io_bound", "triangular_pairs", "DevicePreset", "IOStats",
+    "SSD", "HBM_V5E", "ICI_V5E", "DeepWalk", "Node2vec", "WalkTask",
+    "deepwalk_task", "prnv_task", "rwnv_task", "WalkBatch", "WALK_BYTES",
+    "pack_walks", "unpack_walks", "bucket_ids", "skewed_block_assignment",
+    "split_into_buckets", "traditional_block_assignment", "barabasi_albert",
+    "circulant_graph", "erdos_renyi", "rmat", "stochastic_block_model",
+]

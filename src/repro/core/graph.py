@@ -1,0 +1,262 @@
+"""Blocked CSR graph storage — the paper's on-disk layout (Fig. 2/6) in JAX.
+
+The paper stores a graph as CSR partitioned into ``N_B`` blocks; a *Start
+Vertex File* records the first vertex of each block, an *Index File* holds
+per-vertex neighbor offsets and a *CSR File* the neighbor lists.  Here the
+"disk" tier is host memory (numpy) and the "memory" tier is device memory
+(jnp arrays); every movement across that boundary is metered by
+:mod:`repro.core.stats` so block/vertex I/O counts match the paper's tables.
+
+Blocks are materialised as *stacked, padded* arrays so that a resident block
+(or block pair) always has a static shape — the property that lets the walk
+advance loop be a single jitted function and lets the Pallas kernels pin a
+block pair in VMEM with a fixed BlockSpec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "CSRGraph",
+    "BlockedGraph",
+    "ResidentBlock",
+    "block_of",
+]
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Host-side CSR graph. ``indices`` rows are sorted (binary-search membership)."""
+
+    indptr: np.ndarray  # [V+1] int64
+    indices: np.ndarray  # [E]   int32, sorted within each row
+    weights: Optional[np.ndarray] = None  # [E] float32 or None (unweighted)
+
+    def __post_init__(self) -> None:
+        self.indptr = np.asarray(self.indptr, dtype=np.int64)
+        self.indices = np.asarray(self.indices, dtype=np.int32)
+        if self.weights is not None:
+            self.weights = np.asarray(self.weights, dtype=np.float32)
+            if self.weights.shape != self.indices.shape:
+                raise ValueError("weights must align with indices")
+
+    # -- basic accessors ---------------------------------------------------
+    @property
+    def num_vertices(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def out_degree(self, v) -> np.ndarray:
+        return (self.indptr[1:] - self.indptr[:-1])[v]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return (self.indptr[1:] - self.indptr[:-1]).astype(np.int32)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def neighbor_weights(self, v: int) -> Optional[np.ndarray]:
+        if self.weights is None:
+            return None
+        return self.weights[self.indptr[v] : self.indptr[v + 1]]
+
+    def csr_bytes(self) -> int:
+        """Size of the CSR representation (4-byte cells, as in the paper's Fig. 5)."""
+        return 4 * (self.indptr.shape[0] + self.indices.shape[0])
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_edges(
+        cls,
+        edges: np.ndarray,
+        num_vertices: Optional[int] = None,
+        *,
+        symmetrize: bool = True,
+        weights: Optional[np.ndarray] = None,
+        dedup: bool = True,
+    ) -> "CSRGraph":
+        """Build from an edge list [M, 2]. ``symmetrize`` mirrors the paper
+        ("All graphs are processed into undirected")."""
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.float32).reshape(-1)
+        if num_vertices is None:
+            num_vertices = int(edges.max()) + 1 if edges.size else 0
+        if symmetrize and edges.size:
+            edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+            if weights is not None:
+                weights = np.concatenate([weights, weights], axis=0)
+        if edges.size == 0:
+            return cls(np.zeros(num_vertices + 1, np.int64), np.zeros(0, np.int32))
+        # drop self loops (a second-order walk "return" step is still well
+        # defined without them and the paper's datasets are simple graphs)
+        keep = edges[:, 0] != edges[:, 1]
+        edges = edges[keep]
+        if weights is not None:
+            weights = weights[keep]
+        key = edges[:, 0] * np.int64(num_vertices) + edges[:, 1]
+        order = np.argsort(key, kind="stable")
+        key = key[order]
+        edges = edges[order]
+        if weights is not None:
+            weights = weights[order]
+        if dedup:
+            uniq = np.ones(key.shape[0], dtype=bool)
+            uniq[1:] = key[1:] != key[:-1]
+            edges = edges[uniq]
+            if weights is not None:
+                weights = weights[uniq]
+        counts = np.bincount(edges[:, 0], minlength=num_vertices).astype(np.int64)
+        indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return cls(indptr, edges[:, 1].astype(np.int32), weights)
+
+    def relabel(self, perm: np.ndarray) -> "CSRGraph":
+        """Relabel vertices: new_id = perm[old_id]. Used by custom partitions."""
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0])
+        src = np.repeat(np.arange(self.num_vertices), self.degrees.astype(np.int64))
+        edges = np.stack([perm[src], perm[self.indices]], axis=1)
+        return CSRGraph.from_edges(
+            edges, self.num_vertices, symmetrize=False,
+            weights=self.weights, dedup=False,
+        )
+
+
+def block_of(block_starts: np.ndarray, v) -> np.ndarray:
+    """B(v): the block ID owning vertex ``v`` (contiguous vertex ranges)."""
+    return np.searchsorted(block_starts, v, side="right") - 1
+
+
+@dataclasses.dataclass
+class ResidentBlock:
+    """One block resident in "memory" (device arrays, statically padded).
+
+    ``indptr`` is local (offsets into ``indices``); vertex ``v`` maps to local
+    row ``v - start``.  ``indices`` holds *global* neighbor IDs, sorted per row.
+    """
+
+    block_id: int
+    start: int  # first global vertex id
+    nverts: int
+    nedges: int
+    indptr: np.ndarray  # [max_block_verts + 1] int32 (padded with nedges)
+    indices: np.ndarray  # [max_block_edges] int32 (padded with -1)
+    alias_j: Optional[np.ndarray] = None  # [max_block_edges] int32 alias index
+    alias_q: Optional[np.ndarray] = None  # [max_block_edges] float32 alias prob
+
+    def nbytes_full(self) -> int:
+        """Bytes a full load moves: index slice + CSR slice (4-byte cells)."""
+        return 4 * (self.nverts + 1) + 4 * self.nedges
+
+
+class BlockedGraph:
+    """A CSR graph partitioned into blocks with contiguous vertex ranges.
+
+    Mirrors the paper's sequential partition (§6.2): vertices in ID order are
+    packed into blocks such that each block's CSR slice fits ``block_size``
+    bytes.  Custom partitions relabel the graph first (see
+    :mod:`repro.core.partition`).
+    """
+
+    def __init__(self, graph: CSRGraph, block_starts: Sequence[int], *, build_alias: bool = False):
+        block_starts = np.asarray(block_starts, dtype=np.int64)
+        if block_starts[0] != 0 or block_starts[-1] != graph.num_vertices:
+            raise ValueError("block_starts must span [0, V]")
+        if np.any(np.diff(block_starts) <= 0):
+            raise ValueError("blocks must be non-empty, increasing")
+        self.graph = graph
+        self.block_starts = block_starts
+        self.num_blocks = int(block_starts.shape[0] - 1)
+        nverts = np.diff(block_starts)
+        estarts = graph.indptr[block_starts]
+        nedges = np.diff(estarts)
+        self.block_nverts = nverts.astype(np.int64)
+        self.block_nedges = nedges.astype(np.int64)
+        self.max_block_verts = int(nverts.max())
+        self.max_block_edges = max(int(nedges.max()), 1)
+        self._build_alias = build_alias
+        self._blocks: dict[int, ResidentBlock] = {}
+
+    # -- paper Table 2 style metadata ---------------------------------------
+    def edge_cut(self) -> float:
+        """Fraction of edges whose endpoints live in different blocks."""
+        src = np.repeat(
+            np.arange(self.graph.num_vertices), self.graph.degrees.astype(np.int64)
+        )
+        bs = block_of(self.block_starts, src)
+        bd = block_of(self.block_starts, self.graph.indices)
+        if len(bs) == 0:
+            return 0.0
+        return float(np.mean(bs != bd))
+
+    def block_id_of(self, v) -> np.ndarray:
+        return block_of(self.block_starts, v)
+
+    # -- block materialisation ("disk read") --------------------------------
+    def materialize_block(self, b: int) -> ResidentBlock:
+        """Cut block ``b`` out of the CSR, padded to the global maxima.
+
+        This is a *host* operation; the engine meters the transfer when it
+        places the result in "memory".  Results are cached — the cache models
+        the OS page cache, but the engine always charges the I/O (the paper
+        bypasses the page cache for determinism in its accounting too).
+        """
+        if b in self._blocks:
+            blk = self._blocks[b]
+            if self._build_alias and blk.alias_j is None:
+                self._attach_alias(blk)
+            return blk
+        s, e = int(self.block_starts[b]), int(self.block_starts[b + 1])
+        es, ee = int(self.graph.indptr[s]), int(self.graph.indptr[e])
+        nv, ne = e - s, ee - es
+        indptr = np.full(self.max_block_verts + 1, ne, dtype=np.int32)
+        indptr[: nv + 1] = (self.graph.indptr[s : e + 1] - es).astype(np.int32)
+        indices = np.full(self.max_block_edges, -1, dtype=np.int32)
+        indices[:ne] = self.graph.indices[es:ee]
+        blk = ResidentBlock(b, s, nv, ne, indptr, indices)
+        if self._build_alias:
+            self._attach_alias(blk)
+        self._blocks[b] = blk
+        return blk
+
+    def _attach_alias(self, blk: ResidentBlock) -> None:
+        from .sampling import build_alias_rows  # local import: avoid cycle
+
+        w = None
+        if self.graph.weights is not None:
+            s = int(self.block_starts[blk.block_id])
+            es = int(self.graph.indptr[s])
+            w = np.zeros(self.max_block_edges, dtype=np.float32)
+            w[: blk.nedges] = self.graph.weights[es : es + blk.nedges]
+        blk.alias_j, blk.alias_q = build_alias_rows(
+            blk.indptr, blk.nverts, self.max_block_edges, w
+        )
+
+    def activated_load_bytes(self, vertices: np.ndarray) -> int:
+        """Bytes moved by an on-demand load of ``vertices`` (index entry pair
+        + each vertex's neighbor segment, as in the paper's Fig. 5(b))."""
+        vertices = np.unique(np.asarray(vertices, dtype=np.int64))
+        if vertices.size == 0:
+            return 0
+        deg = self.graph.degrees[vertices].astype(np.int64)
+        return int(8 * vertices.size + 4 * deg.sum())
+
+    def describe(self) -> dict:
+        return {
+            "num_vertices": self.graph.num_vertices,
+            "num_edges": self.graph.num_edges,
+            "num_blocks": self.num_blocks,
+            "max_block_verts": self.max_block_verts,
+            "max_block_edges": self.max_block_edges,
+            "csr_bytes": self.graph.csr_bytes(),
+            "edge_cut": self.edge_cut(),
+        }

@@ -1,0 +1,167 @@
+"""Samplers: alias tables (first-order draws) and the second-order
+rejection sampler used by the Node2vec transition (KnightKing-style).
+
+Everything exists twice:
+  * host numpy builders (graph preprocessing — alias tables per block), and
+  * pure-jnp batched step functions (the oracle the Pallas kernels are
+    validated against, and the implementation the engine jits on CPU).
+
+Why rejection sampling?  A second-order step needs `p(z|u,v) ∝ a'_{vz}`
+(Eq. 1) whose normaliser depends on the *pair* (u, v) — materialising the
+edge-edge distribution is O(sum_v deg(v)^2) memory (the reason in-memory
+systems give up on big graphs).  Instead: propose `z ∝ a_vz` from v's alias
+table, accept with `a'_{vz} / (M · a_vz)` where `M = max(1, 1/p, 1/q)`; the
+accept test only needs `h_uz ∈ {0,1,2}`, i.e. a membership probe `z ∈ N(u)`
+— a binary search over u's sorted adjacency.  All memory touched lives in
+the resident block pair, which is the property the bi-block engine exploits.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "build_alias",
+    "build_alias_rows",
+    "alias_draw_np",
+    "alias_draw",
+    "searchsorted_rows",
+    "membership",
+    "node2vec_accept_prob",
+]
+
+
+# ---------------------------------------------------------------------------
+# Alias tables (Walker's method) — host-side builders
+# ---------------------------------------------------------------------------
+
+def build_alias(probs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Classic O(n) alias construction for one distribution.
+
+    Returns (J, q): draw slot k uniformly, draw r ~ U[0,1); result is k if
+    r < q[k] else J[k].
+    """
+    probs = np.asarray(probs, dtype=np.float64)
+    n = probs.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.float32)
+    s = probs.sum()
+    if s <= 0:
+        probs = np.full(n, 1.0 / n)
+    else:
+        probs = probs / s
+    q = probs * n
+    J = np.arange(n, dtype=np.int32)
+    small = [i for i in range(n) if q[i] < 1.0]
+    large = [i for i in range(n) if q[i] >= 1.0]
+    while small and large:
+        s_i = small.pop()
+        l_i = large.pop()
+        J[s_i] = l_i
+        q[l_i] = q[l_i] - (1.0 - q[s_i])
+        if q[l_i] < 1.0:
+            small.append(l_i)
+        else:
+            large.append(l_i)
+    return J.astype(np.int32), np.minimum(q, 1.0).astype(np.float32)
+
+
+def build_alias_rows(
+    indptr: np.ndarray, nverts: int, pad_len: int, weights: Optional[np.ndarray]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-vertex alias tables over a block's CSR rows, stored edge-aligned
+    and padded to ``pad_len`` (so tables stack uniformly across blocks).
+
+    ``J`` holds *local* (within-row) alias indices so a row's table is
+    position-independent — the engine adds the row offset at draw time.
+    """
+    pad_len = max(pad_len, 1)
+    J = np.zeros(pad_len, dtype=np.int32)
+    q = np.ones(pad_len, dtype=np.float32)
+    for v in range(nverts):
+        s, e = int(indptr[v]), int(indptr[v + 1])
+        if e <= s:
+            continue
+        w = weights[s:e] if weights is not None else np.ones(e - s)
+        Jr, qr = build_alias(w)
+        J[s:e] = Jr
+        q[s:e] = qr
+    return J, q
+
+
+def alias_draw_np(
+    J: np.ndarray, q: np.ndarray, row_start: np.ndarray, row_deg: np.ndarray,
+    u1: np.ndarray, u2: np.ndarray,
+) -> np.ndarray:
+    """Vectorised alias draw (numpy). Returns *local* neighbor slot per row."""
+    k = np.minimum((u1 * row_deg).astype(np.int64), row_deg - 1)
+    idx = row_start + k
+    take_alias = u2 >= q[idx]
+    return np.where(take_alias, J[idx].astype(np.int64), k)
+
+
+@partial(jax.jit, static_argnames=())
+def alias_draw(J, q, row_start, row_deg, u1, u2):
+    """jnp twin of :func:`alias_draw_np` (the kernel oracle)."""
+    k = jnp.minimum((u1 * row_deg).astype(jnp.int32), row_deg - 1)
+    k = jnp.maximum(k, 0)
+    idx = row_start + k
+    take_alias = u2 >= q[idx]
+    return jnp.where(take_alias, J[idx], k)
+
+
+# ---------------------------------------------------------------------------
+# Membership probe: z in N(u) via binary search over sorted adjacency rows
+# ---------------------------------------------------------------------------
+
+def searchsorted_rows(indices, lo, hi, z, *, n_iters: int):
+    """Batched binary search of ``z`` within ``indices[lo:hi]`` (sorted rows).
+
+    Branch-free: fixed ``n_iters = ceil(log2(max_row_len))+1`` halvings, which
+    is what the Pallas kernel runs on the VPU.  Returns True iff found.
+    """
+    lo0 = lo.astype(jnp.int32)
+    hi0 = hi.astype(jnp.int32)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        val = indices[jnp.clip(mid, 0, indices.shape[0] - 1)]
+        valid = lo_ < hi_
+        go_right = valid & (val < z)
+        lo_ = jnp.where(go_right, mid + 1, lo_)
+        hi_ = jnp.where(valid & ~go_right, mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    pos = jnp.clip(lo_f, 0, indices.shape[0] - 1)
+    return (lo_f < hi0) & (indices[pos] == z)
+
+
+def membership(indices, lo, hi, z, *, n_iters: int):
+    """True iff z appears in the sorted slice indices[lo:hi]."""
+    return searchsorted_rows(indices, lo, hi, z, n_iters=n_iters)
+
+
+# ---------------------------------------------------------------------------
+# Node2vec acceptance
+# ---------------------------------------------------------------------------
+
+def node2vec_accept_prob(z, u, is_neighbor_of_u, p: float, q: float):
+    """`a'_vz / (M a_vz)` with M = max(1, 1/p, 1/q)  (Eq. 1, unweighted bias).
+
+    h_uz = 0 (z == u)        -> 1/p
+    h_uz = 1 (z in N(u))     -> 1
+    h_uz = 2 (otherwise)     -> 1/q
+    """
+    M = max(1.0, 1.0 / p, 1.0 / q)
+    bias = jnp.where(
+        z == u, 1.0 / p, jnp.where(is_neighbor_of_u, 1.0, 1.0 / q)
+    )
+    return bias / M

@@ -1,0 +1,136 @@
+"""I/O accounting — the quantities in the paper's Tables 3/4/7.
+
+Every transfer across the slow/fast boundary is metered here.  Costs are both
+*counted* (number of block I/Os, vertex I/Os, bytes) and *modelled* in seconds
+against a device preset, so benchmark results are deterministic on any host.
+The presets expose the paper's regime (SSD: cheap sequential, ruinous random)
+and the TPU regime the system targets (HBM / ICI), which share that shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+__all__ = ["DevicePreset", "SSD", "HBM_V5E", "ICI_V5E", "IOStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePreset:
+    """Bandwidth/latency model of the slow tier."""
+
+    name: str
+    seq_bandwidth: float  # bytes/s for sequential block transfers
+    rand_latency: float  # seconds per random I/O (seek / gather setup)
+    rand_bandwidth: float  # bytes/s once a random transfer streams
+
+    def seq_cost(self, nbytes: int) -> float:
+        return self.rand_latency + nbytes / self.seq_bandwidth
+
+    def rand_cost(self, n_ios: int, nbytes: int) -> float:
+        return n_ios * self.rand_latency + nbytes / self.rand_bandwidth
+
+
+# An NVMe SSD like the paper's testbed: ~2 GB/s sequential, ~80 us random.
+SSD = DevicePreset("ssd", 2.0e9, 8.0e-5, 4.0e8)
+# TPU v5e HBM (the slow tier vs VMEM): 819 GB/s, ~1 us "gather setup".
+HBM_V5E = DevicePreset("hbm_v5e", 8.19e11, 1.0e-6, 8.19e10)
+# TPU v5e ICI link (the slow tier vs local HBM at pod scale): 50 GB/s/link.
+ICI_V5E = DevicePreset("ici_v5e", 5.0e10, 1.0e-6, 5.0e9)
+
+
+class IOStats:
+    """Counter bundle; mirrors the decomposition in the paper's Fig. 1(a)."""
+
+    def __init__(self, preset: DevicePreset = SSD):
+        self.preset = preset
+        self.reset()
+
+    def reset(self) -> None:
+        self.block_ios = 0
+        self.block_bytes = 0
+        self.vertex_ios = 0
+        self.vertex_bytes = 0
+        self.walk_ios = 0
+        self.walk_bytes = 0
+        self.ondemand_ios = 0
+        self.ondemand_bytes = 0
+        self.time_slots = 0
+        self.supersteps = 0
+        self.steps_sampled = 0
+        self.bucket_executions = 0
+        self.sim_block_io_time = 0.0
+        self.sim_vertex_io_time = 0.0
+        self.sim_ondemand_io_time = 0.0
+        self.sim_walk_io_time = 0.0
+        self.exec_time = 0.0  # wall time inside walk updating
+        self.wall_start = time.perf_counter()
+        self.per_block_loads = defaultdict(int)
+
+    # -- metering ------------------------------------------------------------
+    def block_load(self, block_id: int, nbytes: int, *, sequential: bool) -> None:
+        self.block_ios += 1
+        self.block_bytes += nbytes
+        self.per_block_loads[block_id] += 1
+        if sequential:
+            self.sim_block_io_time += self.preset.seq_cost(nbytes)
+        else:
+            self.sim_block_io_time += self.preset.rand_cost(1, nbytes)
+
+    def vertex_load(self, n_vertices: int, nbytes: int) -> None:
+        self.vertex_ios += n_vertices
+        self.vertex_bytes += nbytes
+        self.sim_vertex_io_time += self.preset.rand_cost(n_vertices, nbytes)
+
+    def ondemand_load(self, n_vertices: int, nbytes: int) -> None:
+        self.ondemand_ios += n_vertices
+        self.ondemand_bytes += nbytes
+        self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
+
+    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16) -> None:
+        """Walk pool flush/load: 128-bit encoded walks (paper §6.1)."""
+        self.walk_ios += 1
+        self.walk_bytes += n_walks * bytes_per_walk
+        self.sim_walk_io_time += self.preset.seq_cost(n_walks * bytes_per_walk)
+
+    # -- summaries -------------------------------------------------------------
+    @property
+    def sim_io_time(self) -> float:
+        return (
+            self.sim_block_io_time
+            + self.sim_vertex_io_time
+            + self.sim_ondemand_io_time
+            + self.sim_walk_io_time
+        )
+
+    @property
+    def sim_wall_time(self) -> float:
+        return self.sim_io_time + self.exec_time
+
+    def as_dict(self) -> dict:
+        return {
+            "block_ios": self.block_ios,
+            "block_bytes": self.block_bytes,
+            "vertex_ios": self.vertex_ios,
+            "vertex_bytes": self.vertex_bytes,
+            "ondemand_ios": self.ondemand_ios,
+            "ondemand_bytes": self.ondemand_bytes,
+            "walk_ios": self.walk_ios,
+            "walk_bytes": self.walk_bytes,
+            "time_slots": self.time_slots,
+            "supersteps": self.supersteps,
+            "steps_sampled": self.steps_sampled,
+            "bucket_executions": self.bucket_executions,
+            "sim_block_io_time": self.sim_block_io_time,
+            "sim_vertex_io_time": self.sim_vertex_io_time,
+            "sim_ondemand_io_time": self.sim_ondemand_io_time,
+            "sim_walk_io_time": self.sim_walk_io_time,
+            "sim_io_time": self.sim_io_time,
+            "exec_time": self.exec_time,
+            "sim_wall_time": self.sim_wall_time,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        d = self.as_dict()
+        return "IOStats(" + ", ".join(f"{k}={v}" for k, v in d.items()) + ")"

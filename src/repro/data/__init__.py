@@ -1,0 +1,3 @@
+from .corpus import BOS_OFFSET, WalkCorpus, skipgram_pairs
+
+__all__ = ["BOS_OFFSET", "WalkCorpus", "skipgram_pairs"]

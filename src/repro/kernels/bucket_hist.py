@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: bucket histogram for the in-memory walk manager.
+
+The bucket-based walk management (§4.3.2) is a counting sort keyed by the
+walk's bucket id.  The count pass is the TPU-hostile part (scatter-add);
+the TPU-idiomatic formulation is a one-hot reduction, which the MXU does as
+a [1, T] x [T, NB] matmul per walk tile.  The sort itself then becomes a
+prefix-sum + gather in plain XLA.
+
+Grid: one step per walk tile; every step accumulates into the same output
+block (revisited output pattern — initialise at step 0, accumulate after).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bucket_hist_kernel", "bucket_hist_ref", "HIST_TILE"]
+
+HIST_TILE = 1024
+
+
+def _kernel(ids_ref, valid_ref, out_ref, *, num_buckets: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]
+    valid = valid_ref[...] > 0
+    # one-hot [T, NB] in f32; reduce over T on the MXU (ones-vector matmul)
+    oh = (ids[:, None] == jnp.arange(num_buckets)[None, :]) & valid[:, None]
+    ones = jnp.ones((1, ids.shape[0]), jnp.float32)
+    counts = jnp.dot(
+        ones, oh.astype(jnp.float32), preferred_element_type=jnp.float32
+    )[0]
+    out_ref[...] += counts.astype(jnp.int32)
+
+
+def bucket_hist_kernel(
+    ids, valid, *, num_buckets: int, interpret: bool = True,
+    tile: int = HIST_TILE,
+):
+    """Count walks per bucket. ``ids``: [N] int32; ``valid``: [N] bool."""
+    N = ids.shape[0]
+    if N % tile:
+        raise ValueError(f"walk count {N} must be a multiple of {tile}")
+    return pl.pallas_call(
+        functools.partial(_kernel, num_buckets=num_buckets),
+        grid=(N // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_buckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        interpret=interpret,
+    )(ids, valid.astype(jnp.int32))
+
+
+def bucket_hist_ref(ids, valid, *, num_buckets: int):
+    """Pure-jnp oracle."""
+    oh = (ids[:, None] == jnp.arange(num_buckets)[None, :]) & valid.astype(bool)[:, None]
+    return oh.sum(0).astype(jnp.int32)

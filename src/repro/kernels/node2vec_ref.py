@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the node2vec_step kernel (bit-exact same math)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["node2vec_step_ref"]
+
+
+def node2vec_step_ref(
+    pair_start,
+    pair_nverts,
+    indptr,
+    indices,
+    alias_j,
+    alias_q,
+    prev,
+    cur,
+    hop,
+    active,
+    unif,
+    *,
+    p: float = 1.0,
+    q: float = 1.0,
+    order: int = 2,
+    k_max: int = 4,
+    n_iters: int = 24,
+    has_alias: bool = False,
+):
+    """Same contract as ``node2vec_step_kernel`` (interpret or TPU)."""
+    ME = indices.shape[1]
+    flat_indices = indices.reshape(-1)
+    max_bias = max(1.0, 1.0 / p, 1.0 / q)
+    active = active.astype(bool)
+
+    def locate(v):
+        in0 = (v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])
+        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
+        row = jnp.clip(v - pair_start[slot], 0, indptr.shape[1] - 2)
+        in1 = (v >= pair_start[1]) & (v < pair_start[1] + pair_nverts[1])
+        return slot, row, in0 | in1
+
+    slot, row, resident = locate(cur)
+    row_start = indptr[slot, row]
+    deg = indptr[slot, row + 1] - row_start
+    movable = active & resident & (deg > 0)
+    deg_c = jnp.maximum(deg, 1)
+
+    if order == 2:
+        uslot, urow, _ = locate(prev)
+        u_start = indptr[uslot, urow]
+        ulo = uslot * ME + u_start
+        uhi = ulo + (indptr[uslot, urow + 1] - u_start)
+
+    from repro.core.sampling import searchsorted_rows
+
+    z = cur
+    accepted = ~movable
+    for kk in range(k_max):
+        u1, u2, u3 = unif[:, kk, 0], unif[:, kk, 1], unif[:, kk, 2]
+        kloc = jnp.minimum((u1 * deg_c).astype(jnp.int32), deg_c - 1)
+        idx = slot * ME + row_start + kloc
+        if has_alias:
+            kloc = jnp.where(
+                u2 >= alias_q.reshape(-1)[idx], alias_j.reshape(-1)[idx], kloc
+            )
+            idx = slot * ME + row_start + kloc
+        zk = flat_indices[idx]
+        if order == 2:
+            memb = searchsorted_rows(flat_indices, ulo, uhi, zk, n_iters=n_iters)
+            bias = jnp.where(zk == prev, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
+            acc_p = jnp.where(hop == 0, 1.0, bias / max_bias)
+        else:
+            acc_p = jnp.ones_like(u3)
+        last = kk == k_max - 1
+        take = (~accepted) & movable & ((u3 < acc_p) | last)
+        z = jnp.where(take, zk, z)
+        accepted = accepted | take
+
+    return z, movable.astype(jnp.int32)

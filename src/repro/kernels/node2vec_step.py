@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: one second-order (Node2vec) walk step over a resident
+block pair — the compute hot-spot of the bi-block engine.
+
+TPU adaptation of the paper's inner loop (DESIGN.md §2): the two resident
+blocks (current + ancillary) are pinned in **VMEM** via BlockSpecs with a
+constant index map — the VMEM twin of the paper's "two blocks in RAM".  The
+walk batch streams through in tiles of ``WALK_TILE`` (grid dimension 0), so
+per grid step the working set is
+
+    2 * ME * (4 + 4 + 4) bytes   (indices + alias J + alias q, both blocks)
+  + 2 * (MV+1) * 4               (indptr)
+  + WALK_TILE * small            (walk fields + uniforms)
+
+which bounds the usable block size at roughly ME ≈ 400–500 K edges for a
+16 MB VMEM part — that is the TPU-native answer to the paper's "Block Size"
+knob (§7.6.2), and `repro.configs.grasorw` sets it accordingly.
+
+All lane work is VPU-friendly: alias draw (2 gathers + select), fixed-depth
+binary-search membership (log2(ME) rounds of gather + compare), one accept
+select.  Gathers use per-lane dynamic indices into the VMEM-resident pair
+(Mosaic vector gather).  No MXU use — this kernel is memory/VPU bound, which
+is exactly why the paper's block scheduling (not FLOPs) decides throughput.
+
+The rejection loop is *unrolled* ``k_max`` times (static), matching the
+engine's fori_loop; uniforms are supplied as an input so the kernel is a
+pure function (validated bit-exactly against ``node2vec_ref``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["node2vec_step_kernel", "WALK_TILE"]
+
+WALK_TILE = 512
+
+
+def _kernel(
+    pair_start_ref,  # [2]        SMEM-ish scalars (kept in VMEM for interpret)
+    pair_nverts_ref,  # [2]
+    indptr_ref,      # [2, MV+1]  VMEM, whole pair resident
+    indices_ref,     # [2, ME]
+    alias_j_ref,     # [2, ME]
+    alias_q_ref,     # [2, ME]
+    prev_ref,        # [T]
+    cur_ref,         # [T]
+    hop_ref,         # [T]
+    active_ref,      # [T] int32 (bool as int)
+    unif_ref,        # [T, k_max, 3]
+    z_ref,           # [T] out: next vertex (= cur where not moved)
+    moved_ref,       # [T] out: int32 1 where a step was committed
+    *,
+    p: float,
+    q: float,
+    order: int,
+    k_max: int,
+    n_iters: int,
+    has_alias: bool,
+):
+    ME = indices_ref.shape[1]
+    start = pair_start_ref[...]
+    nverts = pair_nverts_ref[...]
+    indptr = indptr_ref[...]
+    flat_indices = indices_ref[...].reshape(-1)
+    prev = prev_ref[...]
+    cur = cur_ref[...]
+    hop = hop_ref[...]
+    active = active_ref[...] > 0
+    unif = unif_ref[...]
+    max_bias = max(1.0, 1.0 / p, 1.0 / q)
+
+    def locate(v):
+        in0 = (v >= start[0]) & (v < start[0] + nverts[0])
+        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
+        row = jnp.clip(v - start[slot], 0, indptr.shape[1] - 2)
+        in1 = (v >= start[1]) & (v < start[1] + nverts[1])
+        return slot, row, in0 | in1
+
+    slot, row, resident = locate(cur)
+    row_start = indptr[slot, row]
+    deg = indptr[slot, row + 1] - row_start
+    movable = active & resident & (deg > 0)
+    deg_c = jnp.maximum(deg, 1)
+
+    if order == 2:
+        uslot, urow, _ = locate(prev)
+        u_start = indptr[uslot, urow]
+        ulo = uslot * ME + u_start
+        uhi = ulo + (indptr[uslot, urow + 1] - u_start)
+
+    def binsearch(z):
+        """z in sorted flat_indices[ulo:uhi]? fixed-depth lower bound."""
+        lo, hi = ulo, uhi
+
+        def half(carry, _):
+            lo_, hi_ = carry
+            mid = (lo_ + hi_) // 2
+            val = flat_indices[jnp.clip(mid, 0, flat_indices.shape[0] - 1)]
+            valid = lo_ < hi_
+            go_r = valid & (val < z)
+            lo_ = jnp.where(go_r, mid + 1, lo_)
+            hi_ = jnp.where(valid & ~go_r, mid, hi_)
+            return (lo_, hi_), None
+
+        (lo_f, _), _ = jax.lax.scan(half, (lo, hi), None, length=n_iters)
+        pos = jnp.clip(lo_f, 0, flat_indices.shape[0] - 1)
+        return (lo_f < uhi) & (flat_indices[pos] == z)
+
+    z = cur
+    accepted = ~movable
+    for kk in range(k_max):
+        u1, u2, u3 = unif[:, kk, 0], unif[:, kk, 1], unif[:, kk, 2]
+        kloc = jnp.minimum((u1 * deg_c).astype(jnp.int32), deg_c - 1)
+        idx = slot * ME + row_start + kloc
+        if has_alias:
+            aq = alias_q_ref[...].reshape(-1)
+            aj = alias_j_ref[...].reshape(-1)
+            kloc = jnp.where(u2 >= aq[idx], aj[idx], kloc)
+            idx = slot * ME + row_start + kloc
+        zk = flat_indices[idx]
+        if order == 2:
+            memb = binsearch(zk)
+            bias = jnp.where(zk == prev, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
+            acc_p = jnp.where(hop == 0, 1.0, bias / max_bias)
+        else:
+            acc_p = jnp.ones_like(u3)
+        last = kk == k_max - 1
+        take = (~accepted) & movable & ((u3 < acc_p) | last)
+        z = jnp.where(take, zk, z)
+        accepted = accepted | take
+
+    z_ref[...] = z
+    moved_ref[...] = movable.astype(jnp.int32)
+
+
+def node2vec_step_kernel(
+    pair_start,
+    pair_nverts,
+    indptr,
+    indices,
+    alias_j,
+    alias_q,
+    prev,
+    cur,
+    hop,
+    active,
+    unif,
+    *,
+    p: float = 1.0,
+    q: float = 1.0,
+    order: int = 2,
+    k_max: int = 4,
+    n_iters: int = 24,
+    has_alias: bool = False,
+    interpret: bool = True,
+    walk_tile: int = WALK_TILE,
+):
+    """pl.pallas_call wrapper: grid over walk tiles; pair pinned in VMEM.
+
+    ``prev/cur/hop/active`` are [N] with N a multiple of ``walk_tile``;
+    ``unif`` is [N, k_max, 3] uniform(0,1) draws.  Returns (z, moved).
+    """
+    N = prev.shape[0]
+    if N % walk_tile:
+        raise ValueError(f"walk count {N} must be a multiple of {walk_tile}")
+    grid = (N // walk_tile,)
+    MV1 = indptr.shape[1]
+    ME = indices.shape[1]
+
+    pair_spec = lambda s: pl.BlockSpec(s, lambda i: (0,) * len(s))
+    walk_spec = pl.BlockSpec((walk_tile,), lambda i: (i,))
+    unif_spec = pl.BlockSpec((walk_tile, k_max, 3), lambda i: (i, 0, 0))
+
+    kern = functools.partial(
+        _kernel, p=p, q=q, order=order, k_max=k_max, n_iters=n_iters,
+        has_alias=has_alias,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pair_spec((2,)),
+            pair_spec((2,)),
+            pair_spec((2, MV1)),
+            pair_spec((2, ME)),
+            pair_spec((2, ME)),
+            pair_spec((2, ME)),
+            walk_spec,
+            walk_spec,
+            walk_spec,
+            walk_spec,
+            unif_spec,
+        ],
+        out_specs=[walk_spec, walk_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        pair_start, pair_nverts, indptr, indices, alias_j, alias_q,
+        prev, cur, hop, active.astype(jnp.int32), unif,
+    )

@@ -1,0 +1,101 @@
+"""jit'd public wrappers for the walk-step kernels.
+
+``node2vec_step`` pads the walk batch to the tile size, draws the uniforms,
+dispatches either the Pallas kernel (TPU / interpret) or the pure-jnp
+reference, and unpads.  The engines call this one entry point; tests sweep
+both paths and assert they agree.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .node2vec_ref import node2vec_step_ref
+from .node2vec_step import WALK_TILE, node2vec_step_kernel
+
+__all__ = ["node2vec_step", "alias_step"]
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "p", "q", "order", "k_max", "n_iters", "has_alias", "use_kernel",
+        "interpret", "walk_tile",
+    ),
+)
+def node2vec_step(
+    pair_start,
+    pair_nverts,
+    indptr,
+    indices,
+    alias_j,
+    alias_q,
+    prev,
+    cur,
+    hop,
+    active,
+    key,
+    *,
+    p: float = 1.0,
+    q: float = 1.0,
+    order: int = 2,
+    k_max: int = 4,
+    n_iters: int = 24,
+    has_alias: bool = False,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    walk_tile: int = WALK_TILE,
+):
+    """One walk step for a batch over a resident pair. Returns (z, moved)."""
+    n = prev.shape[0]
+    pad = (-n) % walk_tile
+    if pad:
+        pad32 = lambda x: jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        prev, cur, hop = pad32(prev), pad32(cur), pad32(hop)
+        active = jnp.concatenate([active, jnp.zeros((pad,), bool)])
+    N = prev.shape[0]
+    unif = jax.random.uniform(key, (N, k_max, 3))
+    fn = node2vec_step_kernel if use_kernel else node2vec_step_ref
+    kw = dict(
+        p=p, q=q, order=order, k_max=k_max, n_iters=n_iters, has_alias=has_alias
+    )
+    if use_kernel:
+        kw.update(interpret=interpret, walk_tile=walk_tile)
+    z, moved = fn(
+        pair_start, pair_nverts, indptr, indices, alias_j, alias_q,
+        prev, cur, hop, active, unif, **kw,
+    )
+    return z[:n], moved[:n]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("has_alias", "use_kernel", "interpret", "walk_tile"),
+)
+def alias_step(
+    pair_start,
+    pair_nverts,
+    indptr,
+    indices,
+    alias_j,
+    alias_q,
+    cur,
+    active,
+    key,
+    *,
+    has_alias: bool = True,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    walk_tile: int = WALK_TILE,
+):
+    """First-order (DeepWalk) step: alias/uniform neighbor draw."""
+    zero = jnp.zeros_like(cur)
+    return node2vec_step(
+        pair_start, pair_nverts, indptr, indices, alias_j, alias_q,
+        zero, cur, zero, active, key,
+        p=1.0, q=1.0, order=1, k_max=1, n_iters=1, has_alias=has_alias,
+        use_kernel=use_kernel, interpret=interpret, walk_tile=walk_tile,
+    )

@@ -1,0 +1,284 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**input_specs()).compile()`` must succeed on
+the (16,16) single-pod mesh AND the (2,16,16) multi-pod mesh for every
+assigned architecture and input shape.  Nothing is ever allocated — all
+inputs are ShapeDtypeStructs.
+
+Outputs per cell: memory_analysis (bytes/device — proves it fits),
+cost_analysis (FLOPs/bytes), the collective mix parsed from the optimized
+HLO, and the raw artifacts benchmarks/roofline.py consumes.  Results are
+cached incrementally in dryrun_results/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-cell]
+"""
+
+# The VERY FIRST lines — before any other import, jax locks the device count
+# on first init:
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.models import init_params_shape, model_caches  # noqa: E402
+from repro.models.common import ModelConfig  # noqa: E402
+from repro.optim import OptConfig  # noqa: E402
+from repro.sharding import batch_specs, cache_specs, named, param_specs  # noqa: E402
+from repro.sharding.context import activation_rules, default_rules  # noqa: E402
+from repro.train import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "dryrun_results"
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: the token batch (+ stub frontend embeddings);
+    decode: one new token + the full-length caches.
+    """
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if spec.kind in ("train", "prefill"):
+        P = cfg.num_prefix if cfg.frontend == "vision" else 0
+        batch = {
+            "tokens": sds((B, S - P), i32),
+            "labels": sds((B, S - P), i32),
+        }
+        if cfg.frontend == "vision":
+            batch["prefix"] = sds((B, P, cfg.d_model), cfg.dtype)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = sds((B, S, cfg.d_model), cfg.dtype)
+        if spec.kind == "prefill":
+            batch.pop("labels")
+        return {"batch": batch}
+    # decode: one token against a seq_len cache
+    caches = jax.eval_shape(
+        lambda: model_caches(cfg, B, S, enc_len=S)
+    )
+    return {
+        "batch": {"token": sds((B, 1), i32), "cache_len": sds((), i32)},
+        "caches": caches,
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def _collective_mix(hlo_text: str) -> dict:
+    counts = {}
+    for op in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"):
+        counts[op] = sum(
+            1
+            for ln in hlo_text.splitlines()
+            if f" {op}" in ln or ln.lstrip().startswith(f"%{op}")
+            or f"= {op}(" in ln or f" {op}(" in ln
+        )
+    return counts
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    save_hlo: bool = True,
+    microbatches: int = 1,
+    donate: bool = True,
+):
+    """Lower + compile one cell. Returns the result record (dict)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.shape),
+        "devices": n_dev,
+        "kind": spec.kind,
+        "ok": False,
+    }
+
+    params_shape = init_params_shape(cfg)
+    pmode = "train" if spec.kind == "train" else "serve"
+    pspecs = param_specs(cfg, params_shape, mesh, mode=pmode)
+    pshard = named(mesh, pspecs)
+    params_abs = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params_shape, pshard,
+    )
+    ins = input_specs(cfg, shape_name)
+    bspecs = batch_specs(cfg, mesh, spec.global_batch, kind=spec.kind)
+    bshard = named(mesh, {k: bspecs[k] for k in ins["batch"]})
+    batch_abs = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        ins["batch"], bshard,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+    t0 = time.time()
+    act_rules = default_rules(mesh, spec.global_batch, spec.seq_len, cfg.d_model)
+    with jax.set_mesh(mesh), activation_rules(act_rules):
+        if spec.kind == "train":
+            mb = max(microbatches, cfg.train_microbatches)
+            record["microbatches"] = mb
+            step = make_train_step(cfg, OptConfig(), microbatches=mb)
+            # abstract optimizer state (fp32 twins of params, same sharding)
+            from repro.optim import AdamWState
+
+            f32 = lambda l, s: jax.ShapeDtypeStruct(l.shape, jnp.float32, sharding=s)
+            opt_abs = AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                master=jax.tree.map(f32, params_shape, pshard),
+                m=jax.tree.map(f32, params_shape, pshard),
+                v=jax.tree.map(f32, params_shape, pshard),
+            )
+            jitted = jax.jit(
+                step, donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif spec.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            step = make_decode_step(cfg)
+            cspecs = cache_specs(cfg, ins["caches"], mesh, spec.global_batch)
+            cshard = named(mesh, cspecs)
+            caches_abs = jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+                ins["caches"], cshard,
+            )
+            jitted = jax.jit(step, donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_abs, batch_abs, caches_abs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    record.update(
+        ok=True,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        bytes_per_device={
+            "arguments": getattr(mem, "argument_size_in_bytes", None),
+            "outputs": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "alias": getattr(mem, "alias_size_in_bytes", None),
+        },
+        cost_analysis={
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        collectives=_collective_mix(hlo),
+        params=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    if save_hlo:
+        RESULTS_DIR.mkdir(exist_ok=True)
+        tag = f"{arch}_{shape_name}_{record['mesh']}"
+        (RESULTS_DIR / f"{tag}.hlo").write_text(hlo)
+        record["hlo_path"] = str(RESULTS_DIR / f"{tag}.hlo")
+    return record
+
+
+def cell_id(arch, shape, multi_pod):
+    return f"{arch}|{shape}|{'2pod' if multi_pod else '1pod'}"
+
+
+def run_all(*, multi_pod_values=(False, True), archs=None, shapes=None,
+            force: bool = False):
+    RESULTS_DIR.mkdir(exist_ok=True)
+    summary_path = RESULTS_DIR / "summary.json"
+    summary = {}
+    if summary_path.exists():
+        summary = json.loads(summary_path.read_text())
+    archs = archs or ARCH_IDS
+    shapes = shapes or list(SHAPES)
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not shape_applicable(cfg, shape):
+                summary[cell_id(arch, shape, False)] = {
+                    "arch": arch, "shape": shape, "skipped": True,
+                    "reason": "inapplicable (see DESIGN.md §4.1)",
+                }
+                summary_path.write_text(json.dumps(summary, indent=1))
+                continue
+            for mp in multi_pod_values:
+                cid = cell_id(arch, shape, mp)
+                if not force and summary.get(cid, {}).get("ok"):
+                    continue
+                print(f"=== {cid} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp)
+                    print(
+                        f"    ok: compile {rec['compile_s']}s, "
+                        f"temp/dev {rec['bytes_per_device']['temp']}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {
+                        "arch": arch, "shape": shape, "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"    FAIL: {rec['error'][:200]}", flush=True)
+                summary[cid] = rec
+                summary_path.write_text(json.dumps(summary, indent=1))
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        summary = run_all(force=args.force)
+        n_ok = sum(1 for v in summary.values() if v.get("ok"))
+        n_skip = sum(1 for v in summary.values() if v.get("skipped"))
+        n_fail = sum(
+            1 for v in summary.values() if not v.get("ok") and not v.get("skipped")
+        )
+        print(f"\ncells ok={n_ok} skipped={n_skip} failed={n_fail}")
+        raise SystemExit(1 if n_fail else 0)
+    rec = run_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod
+    )
+    print(json.dumps({k: v for k, v in rec.items() if k != "trace"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

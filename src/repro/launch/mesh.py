@@ -1,0 +1,22 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (module import never touches jax
+device state): (16, 16) = one v5e pod, 256 chips, axes (data, model);
+multi_pod adds a leading "pod" axis — (2, 16, 16) = 512 chips.  The caller
+is responsible for the device pool (real TPUs, or
+``--xla_force_host_platform_device_count=512`` in the dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

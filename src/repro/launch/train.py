@@ -1,0 +1,93 @@
+"""Production train launcher.
+
+Assembles: config -> params (sharded init or checkpoint restore) -> data
+(walk corpus) -> resilient step loop, against the production mesh.  On this
+CPU container it runs reduced configs end-to-end (the full configs are
+exercised via dryrun.py); on a TPU fleet the same file is the real
+entry point — the mesh comes from jax.devices() topology.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--graph-vertices", type=int, default=2000)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, reduced_config
+    from repro.core import (
+        BiBlockEngine,
+        erdos_renyi,
+        partition_into_n_blocks,
+        rwnv_task,
+    )
+    from repro.data import WalkCorpus
+    from repro.models import model_init
+    from repro.optim import OptConfig, adamw_init
+    from repro.runtime import ResilientTrainer
+    from repro.train import make_train_step
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    print(f"arch={cfg.name} devices={jax.device_count()}")
+
+    # data: walk corpus from the paper's engine
+    g = erdos_renyi(args.graph_vertices, args.graph_vertices * 8, seed=0)
+    bg = partition_into_n_blocks(g, 6)
+    res = BiBlockEngine(bg, rwnv_task(walks_per_vertex=2, length=32),
+                        record_walks=True).run()
+    corpus = WalkCorpus.from_walks(res.corpus, g.num_vertices)
+    print(f"corpus: {len(corpus):,} walks, vocab {corpus.vocab_size:,}")
+
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    step = jax.jit(
+        make_train_step(cfg, opt_cfg, microbatches=args.microbatches),
+        donate_argnums=(0, 1),
+    )
+    opt = adamw_init(params)
+    trainer = ResilientTrainer(
+        train_step=step, ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 4, 10),
+        heartbeat_path=Path(args.ckpt_dir) / "heartbeat",
+    )
+    resumed = trainer.resume(params, opt)
+    start, cursor = 0, 0
+    if resumed:
+        params, opt, start, cursor = resumed
+        cursor = cursor or 0
+        print(f"resumed at step {start}")
+
+    def on_metrics(s, m):
+        if s % 10 == 0:
+            print(f"step {s:4d} loss {m['loss']:.4f} "
+                  f"({m['step_time']*1e3:.0f} ms)")
+
+    params, opt, info = trainer.run(
+        params, opt,
+        corpus.batches(args.batch, args.seq, cursor=cursor, seed=1),
+        num_steps=args.steps, start_step=start, on_metrics=on_metrics,
+    )
+    print(f"finished at step {info['step']}; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

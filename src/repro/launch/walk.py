@@ -1,0 +1,78 @@
+"""Walk-engine launcher: run a GraSorw task from the command line.
+
+    PYTHONPATH=src python -m repro.launch.walk --task rwnv --vertices 5000 \
+        --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25]
+
+Prints the paper's headline statistics (block/vertex/on-demand I/Os,
+simulated I/O + exec time) as one CSV row per engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=("rwnv", "prnv", "deepwalk"), default="rwnv")
+    ap.add_argument("--engine", action="append", default=None,
+                    choices=("biblock", "pb", "sogw", "sgsc", "oracle"))
+    ap.add_argument("--vertices", type=int, default=5000)
+    ap.add_argument("--avg-degree", type=int, default=16)
+    ap.add_argument("--blocks", type=int, default=8)
+    ap.add_argument("--walks-per-vertex", type=int, default=2)
+    ap.add_argument("--length", type=int, default=20)
+    ap.add_argument("--p", type=float, default=1.0)
+    ap.add_argument("--q", type=float, default=1.0)
+    ap.add_argument("--query", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loading", default="auto",
+                    choices=("auto", "full", "ondemand"))
+    args = ap.parse_args()
+
+    from repro.core import (
+        BiBlockEngine,
+        InMemoryWalker,
+        PlainBucketEngine,
+        SOGWEngine,
+        deepwalk_task,
+        erdos_renyi,
+        partition_into_n_blocks,
+        prnv_task,
+        rwnv_task,
+    )
+
+    g = erdos_renyi(args.vertices, args.vertices * args.avg_degree // 2,
+                    seed=args.seed)
+    bg = partition_into_n_blocks(g, args.blocks)
+    if args.task == "rwnv":
+        task = rwnv_task(p=args.p, q=args.q,
+                         walks_per_vertex=args.walks_per_vertex,
+                         length=args.length, seed=args.seed)
+    elif args.task == "prnv":
+        task = prnv_task(args.query, g.num_vertices, p=args.p, q=args.q,
+                         seed=args.seed)
+    else:
+        task = deepwalk_task(walks_per_vertex=args.walks_per_vertex,
+                             length=args.length, seed=args.seed)
+
+    engines = args.engine or ["biblock", "sogw"]
+    print("engine,block_ios,vertex_ios,ondemand_ios,sim_io_s,exec_s,sim_wall_s")
+    for name in engines:
+        if name == "biblock":
+            res = BiBlockEngine(bg, task, loading=args.loading).run()
+        elif name == "pb":
+            res = PlainBucketEngine(bg, task).run()
+        elif name == "sogw":
+            res = SOGWEngine(bg, task).run()
+        elif name == "sgsc":
+            res = SOGWEngine(bg, task, static_cache=True).run()
+        else:
+            res = InMemoryWalker(bg, task).run(record_walks=False)
+        s = res.stats
+        print(f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
+              f"{s.sim_io_time:.4f},{s.exec_time:.4f},{s.sim_wall_time:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Assigned-architecture model zoo (pure-function JAX, segment-scanned)."""
+
+from .common import ModelConfig, padded_vocab
+from .registry import (
+    init_params_shape,
+    model_caches,
+    model_decode,
+    model_forward,
+    model_init,
+    model_prefill,
+)
+
+__all__ = [
+    "ModelConfig", "padded_vocab", "init_params_shape", "model_caches",
+    "model_decode", "model_forward", "model_init", "model_prefill",
+]

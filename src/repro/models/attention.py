@@ -1,0 +1,335 @@
+"""Attention: GQA-grouped flash (custom VJP), banded local attention, and
+single-token decode against a KV cache.
+
+GQA grouping (§Perf iteration 1): K/V are NEVER expanded to the query head
+count — all einsums carry an explicit (kv_head, group) split, so KV HBM
+traffic is KVH/H of the naive version (7x less for yi-34b, 6x for mixtral).
+
+The custom VJP is the production-critical part: differentiating the naive
+chunk scan stashes O(S^2/chunk) softmax statistics per layer (measured
+15 GB/device at yi-34b train_4k); the flash backward recomputes each tile
+from (q, k, v, out, lse).
+
+``window`` makes the KV scan *banded*: only the ceil((Cq+W)/Ck)+1 chunks
+that can be visible to a q chunk are touched — local attention is O(S*W).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, dense_init, rope
+
+__all__ = [
+    "attn_init",
+    "attention_apply",
+    "attention_decode",
+    "chunked_attention",
+    "init_kv_cache",
+]
+
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), cfg.dtype),
+        "wk": dense_init(ks[1], (d, kvh * hd), cfg.dtype),
+        "wv": dense_init(ks[2], (d, kvh * hd), cfg.dtype),
+        "wo": dense_init(ks[3], (h * hd, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), cfg.dtype)
+    return p
+
+
+def _band_params(banded, nk, q_chunk, kv_chunk, window):
+    if not banded:
+        return nk
+    return min(-(-(q_chunk + window) // kv_chunk) + 1, nk)
+
+
+def _tile_mask(qi, kj_eff, in_range, causal, window, q_offset, q_chunk,
+               kv_chunk, Sk):
+    qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+    kpos = kj_eff * kv_chunk + jnp.arange(kv_chunk)
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+        mask &= in_range
+    mask &= kpos[None, :] < Sk
+    return mask
+
+
+def chunked_attention(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    q_offset: int = 0, q_chunk: int = 512, kv_chunk: int = 1024,
+):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KVH, D] with H % KVH == 0."""
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    qp = nq * q_chunk - Sq
+    kp = nk * kv_chunk - Sk
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+    out = _flash(causal, window, q_offset, q_chunk, kv_chunk, Sk, G)(q, k, v)
+    return out[:, :Sq]
+
+
+def _flash(causal, window, q_offset, q_chunk, kv_chunk, Sk, G):
+    """Factory: custom-VJP GQA flash closed over the static config."""
+    banded = window is not None
+
+    def split_chunks(q, k, v):
+        B, Sqp, H, D = q.shape
+        KVH = k.shape[2]
+        nq = Sqp // q_chunk
+        nk = k.shape[1] // kv_chunk
+        # qc: [nq, B, KVH, G, Cq, D]
+        qc = q.reshape(B, nq, q_chunk, KVH, G, D).transpose(1, 0, 3, 4, 2, 5)
+        kc = k.reshape(B, nk, kv_chunk, KVH, D).transpose(1, 0, 3, 2, 4)
+        vc = v.reshape(B, nk, kv_chunk, KVH, D).transpose(1, 0, 3, 2, 4)
+        return qc, kc, vc, nq, nk
+
+    def first_chunk(qi):
+        return jnp.maximum((q_offset + qi * q_chunk - window) // kv_chunk, 0)
+
+    def fwd_impl(q, k, v):
+        B, Sqp, H, D = q.shape
+        scale = 1.0 / math.sqrt(D)
+        qc, kc, vc, nq, nk = split_chunks(q, k, v)
+        nk_band = _band_params(banded, nk, q_chunk, kv_chunk, window)
+
+        def q_body(_, qi):
+            qblk = qc[qi] * scale  # [B,KVH,G,Cq,D]
+
+            def kv_body(carry, kj):
+                m, l, acc = carry
+                in_range = first_chunk(qi) + kj < nk if banded else True
+                kj_eff = (
+                    jnp.clip(first_chunk(qi) + kj, 0, nk - 1) if banded else kj
+                )
+                s = jnp.einsum(
+                    "bhgqd,bhkd->bhgqk", qblk, kc[kj_eff],
+                    preferred_element_type=jnp.float32,
+                )
+                mask = _tile_mask(qi, kj_eff, in_range, causal, window,
+                                  q_offset, q_chunk, kv_chunk, Sk)
+                s = jnp.where(mask[None, None, None], s, -1e30)
+                m_new = jnp.maximum(m, s.max(-1))
+                r = jnp.exp(m - m_new)
+                pe = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
+                l = l * r + pe.sum(-1)
+                acc = acc * r[..., None] + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", pe.astype(vc.dtype), vc[kj_eff],
+                    preferred_element_type=jnp.float32,
+                )
+                return (m_new, l, acc), None
+
+            KVH = qblk.shape[1]
+            m0 = jnp.full((qblk.shape[0], KVH, G, q_chunk), -jnp.inf,
+                          jnp.float32)
+            l0 = jnp.zeros_like(m0)
+            a0 = jnp.zeros((*m0.shape, qblk.shape[-1]), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                          jnp.arange(nk_band))
+            o = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+            lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+            return None, (o, lse)
+
+        _, (outs, lses) = jax.lax.scan(q_body, None, jnp.arange(nq))
+        # outs: [nq, B, KVH, G, Cq, D] -> [B, Sq, H, D]
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, D)
+        # lses: [nq, B, KVH, G, Cq] -> [B, Sq, KVH, G]
+        lse = lses.transpose(1, 0, 4, 2, 3).reshape(B, nq * q_chunk, H // G, G)
+        return out, lse
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd_impl(q, k, v)[0]
+
+    def attn_fwd(q, k, v):
+        out, lse = fwd_impl(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def attn_bwd(res, dout):
+        q, k, v, out, lse = res
+        B, Sqp, H, D = q.shape
+        KVH = k.shape[2]
+        scale = 1.0 / math.sqrt(D)
+        qc, kc, vc, nq, nk = split_chunks(q, k, v)
+        doc = dout.reshape(B, nq, q_chunk, KVH, G, D).transpose(1, 0, 3, 4, 2, 5)
+        lsec = lse.reshape(B, nq, q_chunk, KVH, G).transpose(1, 0, 3, 4, 2)
+        Drow = (dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+        Dc = Drow.reshape(B, nq, q_chunk, KVH, G).transpose(1, 0, 3, 4, 2)
+        nk_band = _band_params(banded, nk, q_chunk, kv_chunk, window)
+
+        def q_body(carry, qi):
+            dk_acc, dv_acc = carry  # [nk, B, KVH, Ck, D] f32
+            qblk = qc[qi]
+            do = doc[qi].astype(jnp.float32)
+            lse_i = lsec[qi]
+            D_i = Dc[qi]
+
+            def kv_body(carry2, kj):
+                dq_i, dk_acc, dv_acc = carry2
+                in_range = first_chunk(qi) + kj < nk if banded else True
+                kj_eff = (
+                    jnp.clip(first_chunk(qi) + kj, 0, nk - 1) if banded else kj
+                )
+                kblk = kc[kj_eff]
+                vblk = vc[kj_eff]
+                s = jnp.einsum(
+                    "bhgqd,bhkd->bhgqk", qblk * scale, kblk,
+                    preferred_element_type=jnp.float32,
+                )
+                mask = _tile_mask(qi, kj_eff, in_range, causal, window,
+                                  q_offset, q_chunk, kv_chunk, Sk)
+                s = jnp.where(mask[None, None, None], s, -1e30)
+                p = jnp.exp(s - lse_i[..., None]) * mask[None, None, None]
+                dp = jnp.einsum(
+                    "bhgqd,bhkd->bhgqk", do, vblk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                ds = p * (dp - D_i[..., None]) * scale
+                dq_i = dq_i + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", ds, kblk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                dk_j = jnp.einsum(  # sum over the query group
+                    "bhgqk,bhgqd->bhkd", ds, qblk.astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+                dv_j = jnp.einsum(
+                    "bhgqk,bhgqd->bhkd", p, do,
+                    preferred_element_type=jnp.float32,
+                )
+                keep = jnp.where(in_range, 1.0, 0.0) if banded else 1.0
+                dk_acc = dk_acc.at[kj_eff].add(keep * dk_j)
+                dv_acc = dv_acc.at[kj_eff].add(keep * dv_j)
+                return (dq_i, dk_acc, dv_acc), None
+
+            dq0 = jnp.zeros(qblk.shape, jnp.float32)
+            (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+                kv_body, (dq0, dk_acc, dv_acc), jnp.arange(nk_band)
+            )
+            return (dk_acc, dv_acc), dq_i
+
+        dk0 = jnp.zeros((nk, B, KVH, kv_chunk, D), jnp.float32)
+        dv0 = jnp.zeros_like(dk0)
+        (dk_acc, dv_acc), dqs = jax.lax.scan(q_body, (dk0, dv0), jnp.arange(nq))
+        dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, D)
+        dk = dk_acc.transpose(1, 0, 3, 2, 4).reshape(B, nk * kv_chunk, KVH, D)
+        dv = dv_acc.transpose(1, 0, 3, 2, 4).reshape(B, nk * kv_chunk, KVH, D)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def attention_apply(
+    params, x, cfg: ModelConfig, *, window: Optional[int] = None,
+    positions=None, causal: bool = True, kv_override=None,
+):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, S, h, hd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,de->bse", x, params["wk"])
+        v = jnp.einsum("bsd,de->bse", x, params["wv"])
+        if "bk" in params:
+            k = k + params["bk"]
+            v = v + params["bv"]
+        k = k.reshape(B, -1, kvh, hd)
+        v = v.reshape(B, -1, kvh, hd)
+    else:
+        k, v = kv_override  # cross attention: precomputed from encoder
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    if kv_override is None and not cfg.learned_pos:
+        sin, cos = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        kpos = jnp.arange(k.shape[1])[None]
+        ksin, kcos = rope(kpos, hd, cfg.rope_theta)
+        k = apply_rope(k, ksin, kcos)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"]), (k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *, window=None):
+    """Cache for one attention layer. Local layers keep only the window."""
+    length = min(window, max_len) if window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def attention_decode(
+    params, x, cache, cache_len, cfg: ModelConfig, *, window: Optional[int] = None,
+):
+    """One-token decode. x: [B, 1, D]; cache k/v: [B, L, KVH, HD];
+    cache_len: [] int32 — number of valid cache positions.
+    GQA-grouped: the cache is read once, not query-head-many times.
+    """
+    B = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kvh
+    L = cache["k"].shape[1]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(B, 1, kvh, g, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = k.reshape(B, 1, kvh, hd)
+    v = v.reshape(B, 1, kvh, hd)
+    pos = cache_len
+    if not cfg.learned_pos:
+        sin, cos = rope(pos[None, None], hd, cfg.rope_theta)
+        q = apply_rope(
+            q.reshape(B, 1, h, hd), sin, cos
+        ).reshape(B, 1, kvh, g, hd)
+        k = apply_rope(k, sin, cos)
+    slot = (pos % L) if window else jnp.minimum(pos, L - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q * (1.0 / math.sqrt(hd)), ck,
+        preferred_element_type=jnp.float32,
+    )
+    idx = jnp.arange(L)
+    valid = idx <= slot if window is None else ((idx <= slot) | (pos >= L))
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(B, 1, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"]), {"k": ck, "v": cv}

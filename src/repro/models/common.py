@@ -1,0 +1,219 @@
+"""Model substrate: config schema, norms, embeddings, RoPE, MLPs, init.
+
+One :class:`ModelConfig` describes every assigned architecture; the layer
+stack is expressed as *segments* — ``(pattern, n_groups)`` pairs where
+``pattern`` is a tuple of block kinds (e.g. ``('rglru','rglru','local')``)
+scanned ``n_groups`` times with stacked parameters.  Homogeneous models are
+the special case ``((kind,), n_layers)``.  This keeps HLO size O(1) in depth
+(compile time on the 512-device dry-run) while supporting hybrids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelConfig",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "dense_init",
+    "mlp_apply",
+    "mlp_init",
+    "padded_vocab",
+]
+
+BlockKind = str  # 'attn' | 'local' | 'mla' | 'ssd' | 'rglru' | 'enc' | 'dec'
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    segments: Tuple[Tuple[Tuple[str, ...], int], ...]  # ((pattern), n_groups)
+    # attention
+    window: Optional[int] = None  # sliding window for 'local' blocks / SWA
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    # mlp
+    mlp_type: str = "swiglu"  # 'swiglu' | 'geglu' | 'gelu'
+    # MoE (0 experts = dense)
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    moe_shard_experts: bool = False  # EP when n_experts % model axis == 0
+    #: store each expert's gated FFN as `split` column-sliced *virtual
+    #: experts* (exact for gated MLPs).  Lets an expert count smaller than
+    #: the model axis use expert parallelism (mixtral: 8 experts x split 2
+    #: = 16 virtual experts on the 16-way axis) with no runtime transpose.
+    moe_virtual_split: int = 1
+    capacity_factor: float = 1.25
+    # MLA
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+    # RG-LRU
+    lru_width: int = 0
+    # enc-dec
+    n_encoder_layers: int = 0
+    learned_pos: bool = False
+    max_pos: int = 0  # learned-position table size (enc-dec)
+    # frontend stubs
+    frontend: Optional[str] = None  # 'vision' | 'audio' | None
+    num_prefix: int = 0  # patch embeddings prepended ([vlm])
+    # numerics
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    #: activation rematerialisation for the layer scan:
+    #: 'none' | 'nothing' (recompute everything) | 'dots' (save matmul outs)
+    remat_policy: str = "nothing"
+    #: gradient-accumulation microbatches for train_step (activation memory
+    #: divides by this; global batch and numerics are unchanged)
+    train_microbatches: int = 1
+    # serve-ability flags
+    subquadratic: bool = False  # may run long_500k
+    skip_decode: bool = False  # encoder-only archs
+
+    # ----- derived -----------------------------------------------------------
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        out = []
+        for pattern, n in self.segments:
+            out.extend(list(pattern) * n)
+        return tuple(out)
+
+    @property
+    def vocab_padded(self) -> int:
+        return padded_vocab(self.vocab_size)
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Total parameter count (exact, from the init shapes)."""
+        from .registry import init_params_shape  # local: avoid cycle
+
+        shapes = init_params_shape(self)
+        return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+
+    def active_param_count(self) -> int:
+        """Active-per-token params (MoE counts top_k + shared experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        from .registry import init_params_shape
+
+        shapes = init_params_shape(self)
+        moe_total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = "/".join(str(k) for k in path)
+            if "experts" in keys and "shared" not in keys:
+                moe_total += int(np.prod(leaf.shape))
+        active_moe = moe_total * self.top_k // max(self.n_experts, 1)
+        return total - moe_total + active_moe
+
+
+def padded_vocab(v: int, multiple: int = 256) -> int:
+    """Vocab padded for clean sharding over the 16-way model axis."""
+    return int(math.ceil(v / multiple) * multiple)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(positions, dim: int, theta: float):
+    """Rotary tables: returns (sin, cos) of shape [..., dim/2]."""
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., S, H, D]; sin/cos: [..., S, D/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init + dense MLPs
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    return {
+        "w_in": dense_init(k1, (d, 2 * f if gated else f), cfg.dtype),
+        "w_out": dense_init(k2, (f, d), cfg.dtype),
+    }
+
+
+def mlp_apply(params, x, mlp_type: str):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if mlp_type in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(g) if mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

@@ -1,0 +1,213 @@
+"""Encoder-decoder backbone (whisper-tiny).
+
+Per the [audio] assignment rule the conv/mel frontend is a STUB —
+``input_specs()`` supplies precomputed frame embeddings [B, S_enc, D].
+The backbone is the standard whisper transformer: bidirectional encoder
+(learned positions, GeLU MLP), causal decoder with cross-attention.
+
+Decode (serve_step) attends to precomputed encoder K/V (computed once at
+prefill) plus a growing self-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_apply,
+    attention_decode,
+    attn_init,
+    init_kv_cache,
+)
+from .common import ModelConfig, dense_init, layer_norm, mlp_apply, mlp_init
+from repro.sharding.context import constrain
+
+__all__ = [
+    "encdec_init",
+    "encode",
+    "encdec_forward",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "init_decoder_caches",
+]
+
+
+def _ln_init(cfg):
+    return {
+        "scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "bias": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def encdec_init(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    vp = cfg.vocab_padded
+    enc_layer_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_layer_keys = jax.random.split(ks[1], cfg.n_layers)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": _ln_init(cfg),
+            "attn": attn_init(k1, cfg),
+            "ln2": _ln_init(cfg),
+            "mlp": mlp_init(k2, cfg),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": _ln_init(cfg),
+            "self_attn": attn_init(k1, cfg),
+            "ln_x": _ln_init(cfg),
+            "cross_attn": attn_init(k2, cfg),
+            "ln2": _ln_init(cfg),
+            "mlp": mlp_init(k3, cfg),
+        }
+
+    return {
+        "enc_pos": dense_init(ks[2], (cfg.max_pos, cfg.d_model), cfg.dtype, 0.02),
+        "dec_pos": dense_init(ks[3], (cfg.max_pos, cfg.d_model), cfg.dtype, 0.02),
+        "embed": dense_init(ks[4], (vp, cfg.d_model), cfg.dtype, 0.02),
+        "enc_layers": jax.vmap(enc_layer)(enc_layer_keys),
+        "dec_layers": jax.vmap(dec_layer)(dec_layer_keys),
+        "enc_ln": _ln_init(cfg),
+        "dec_ln": _ln_init(cfg),
+    }
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: [B, S_enc, D] (frontend stub output) -> encoder states."""
+    S = frames.shape[1]
+    pos = params["enc_pos"][jnp.arange(S) % cfg.max_pos]
+    x = frames.astype(cfg.dtype) + pos[None]
+
+    def body(h, p):
+        a, _ = attention_apply(p["attn"], _ln(h, p["ln1"], cfg.norm_eps), cfg, causal=False)
+        h = h + a
+        h = h + mlp_apply(p["mlp"], _ln(h, p["ln2"], cfg.norm_eps), "gelu")
+        return constrain(h, "residual"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_ln"], cfg.norm_eps)
+
+
+def _decoder(params, x, enc_states, cfg: ModelConfig, *, collect_cache: bool):
+    """Teacher-forced decoder. x: [B, S_dec, D] token embeddings (+pos)."""
+
+    def body(carry, p):
+        h = carry
+        a, kv_self = attention_apply(
+            p["self_attn"], _ln(h, p["ln1"], cfg.norm_eps), cfg, causal=True
+        )
+        h = h + a
+        # cross attention: keys/values from encoder states (no rope)
+        hq = _ln(h, p["ln_x"], cfg.norm_eps)
+        kvh, hd = cfg.n_kv_heads, cfg.head_dim
+        B, Se = enc_states.shape[0], enc_states.shape[1]
+        k = jnp.einsum("bsd,de->bse", enc_states, p["cross_attn"]["wk"]).reshape(
+            B, Se, kvh, hd
+        )
+        v = jnp.einsum("bsd,de->bse", enc_states, p["cross_attn"]["wv"]).reshape(
+            B, Se, kvh, hd
+        )
+        a, kv_cross = attention_apply(
+            p["cross_attn"], hq, cfg, causal=False, kv_override=(k, v)
+        )
+        h = h + a
+        h = h + mlp_apply(p["mlp"], _ln(h, p["ln2"], cfg.norm_eps), "gelu")
+        h = constrain(h, "residual")
+        out = None
+        if collect_cache:
+            out = {"self": {"k": kv_self[0], "v": kv_self[1]},
+                   "cross": {"k": kv_cross[0], "v": kv_cross[1]}}
+        return h, out
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return _ln(x, params["dec_ln"], cfg.norm_eps), caches
+
+
+def encdec_forward(params, frames, dec_tokens, cfg: ModelConfig,
+                   *, collect_cache: bool = False):
+    """Returns (logits [B, S_dec, vocab_padded], aux=0)."""
+    enc = encode(params, frames, cfg)
+    S = dec_tokens.shape[1]
+    pos = params["dec_pos"][jnp.arange(S) % cfg.max_pos]
+    x = params["embed"][dec_tokens] + pos[None]
+    x, caches = _decoder(params, x, enc, cfg, collect_cache=collect_cache)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T)
+    if collect_cache:
+        return logits, caches, jnp.zeros((), jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(params, frames, dec_tokens, cfg: ModelConfig):
+    logits, caches, _ = encdec_forward(
+        params, frames, dec_tokens, cfg, collect_cache=True
+    )
+    return logits[:, -1], caches
+
+
+def init_decoder_caches(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    """Abstract decoder caches: growing self cache + fixed cross K/V."""
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    one = {
+        "self": {
+            "k": jnp.zeros((batch, max_len, kvh, hd), cfg.dtype),
+            "v": jnp.zeros((batch, max_len, kvh, hd), cfg.dtype),
+        },
+        "cross": {
+            "k": jnp.zeros((batch, enc_len, kvh, hd), cfg.dtype),
+            "v": jnp.zeros((batch, enc_len, kvh, hd), cfg.dtype),
+        },
+    }
+    L = cfg.n_layers
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (L, *x.shape)), one)
+
+
+def encdec_decode_step(params, token, caches, cache_len, cfg: ModelConfig):
+    """One decoder token; cross K/V comes from the caches (precomputed)."""
+    B = token.shape[0]
+    pos = params["dec_pos"][jnp.minimum(cache_len, cfg.max_pos - 1)]
+    x = params["embed"][token] + pos[None, None]
+
+    import math
+
+    def body(h, pc):
+        p, c = pc
+        hn = _ln(h, p["ln1"], cfg.norm_eps)
+        a, nself = attention_decode(p["self_attn"], hn, c["self"], cache_len, cfg)
+        h = h + a
+        # cross attention against fixed encoder K/V
+        hq = _ln(h, p["ln_x"], cfg.norm_eps)
+        kvh, hd, nh = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+        q = jnp.einsum("bsd,de->bse", hq, p["cross_attn"]["wq"]).reshape(
+            B, 1, nh, hd
+        )
+        ck, cv = c["cross"]["k"], c["cross"]["v"]
+        rep = nh // kvh
+        ckx = jnp.repeat(ck, rep, axis=2) if rep > 1 else ck
+        cvx = jnp.repeat(cv, rep, axis=2) if rep > 1 else cv
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", q * (1.0 / math.sqrt(hd)), ckx,
+            preferred_element_type=jnp.float32,
+        )
+        pattn = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bhqk,bkhd->bqhd", pattn.astype(cvx.dtype), cvx
+        ).reshape(B, 1, nh * hd)
+        h = h + jnp.einsum("bse,ed->bsd", o, p["cross_attn"]["wo"])
+        h = h + mlp_apply(p["mlp"], _ln(h, p["ln2"], cfg.norm_eps), "gelu")
+        return h, {"self": nself, "cross": c["cross"]}
+
+    x, ncaches = jax.lax.scan(body, x, (params["dec_layers"], caches))
+    x = _ln(x, params["dec_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T)[:, 0]
+    return logits, ncaches

@@ -1,0 +1,74 @@
+"""Model facade: one entry point per model kind (decoder LM, VLM-prefixed
+LM, encoder-decoder), dispatched from the config.  The launch/ and train/
+layers only ever talk to these four functions + `init_params_shape`.
+
+Batch schema (input_specs() in launch/dryrun.py produces exactly these):
+  LM     : {tokens [B,S] i32, labels [B,S] i32}
+  VLM    : + prefix [B,P,D] bf16       (stub frontend output)
+  audio  : {frames [B,Se,D] bf16, tokens [B,Sd] i32, labels [B,Sd] i32}
+  decode : {token [B,1] i32, cache_len [] i32} + caches pytree
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .common import ModelConfig
+
+__all__ = [
+    "model_init",
+    "model_forward",
+    "model_prefill",
+    "model_decode",
+    "model_caches",
+    "init_params_shape",
+]
+
+
+def model_init(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_init(key, cfg)
+    return transformer.init_params(key, cfg)
+
+
+def init_params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_init(jax.random.PRNGKey(0), cfg))
+
+
+def model_forward(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """Teacher-forced logits over the *label-aligned* region + aux loss."""
+    if cfg.is_encoder_decoder:
+        logits, aux = encdec.encdec_forward(
+            params, batch["frames"], batch["tokens"], cfg
+        )
+        return logits, aux
+    prefix = batch.get("prefix")
+    logits, aux = transformer.forward(params, batch["tokens"], cfg,
+                                      prefix_embeds=prefix)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1] :]  # labels align with tokens
+    return logits, aux
+
+
+def model_prefill(params, batch: Dict[str, Any], cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_prefill(params, batch["frames"], batch["tokens"], cfg)
+    return transformer.prefill(
+        params, batch["tokens"], cfg, prefix_embeds=batch.get("prefix")
+    )
+
+
+def model_caches(cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 0):
+    if cfg.is_encoder_decoder:
+        return encdec.init_decoder_caches(cfg, batch, max_len, enc_len or max_len)
+    return transformer.init_caches(cfg, batch, max_len)
+
+
+def model_decode(params, token, caches, cache_len, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.encdec_decode_step(params, token, caches, cache_len, cfg)
+    return transformer.decode_step(params, token, caches, cache_len, cfg)

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block is: linear in -> causal conv (width 4) -> RG-LRU -> linear out,
+gated by a parallel GeLU branch (Griffin's recurrent block).  The linear
+recurrence h_t = a_t h_{t-1} + b_t is computed with an associative scan
+(log-depth — and shardable along the sequence axis; XLA lowers the
+cross-shard combine to a ppermute chain).  Decode carries [B, W] state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+from .ssm import _causal_conv
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), cfg.dtype),  # recurrent branch in
+        "w_gate": dense_init(ks[1], (d, w), cfg.dtype),  # gelu gate branch
+        "conv": dense_init(ks[2], (cfg.conv_width, w), cfg.dtype, scale=0.5),
+        "w_a": dense_init(ks[3], (w, w), cfg.dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (w, w), cfg.dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a ~ uniform(0.9, 0.999) at r = 0.5 (Griffin)
+        "lam": jnp.linspace(2.0, 6.0, w, dtype=jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), cfg.dtype),
+    }
+
+
+def _gates(params, x):
+    """x: [..., w] (post conv). Returns (log_a, b) of the recurrence."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", x, params["w_a"]).astype(jnp.float32)
+        + params["b_a"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", x, params["w_i"]).astype(jnp.float32)
+        + params["b_i"]
+    )
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"])  # [..., w], negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_apply(params, x, cfg: ModelConfig, *, initial_state=None) -> Tuple[jax.Array, dict]:
+    """x: [B, S, D].  Returns (out, cache)."""
+    B, S, D = x.shape
+    xr = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]))
+    xc, conv_state = _causal_conv(xr, params["conv"])
+    a, b = _gates(params, xc)  # [B,S,w] f32
+    if initial_state is not None:
+        # fold h0 into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * initial_state)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, params["w_out"])
+    return out, {"h": h[:, -1], "conv": conv_state}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.dtype),
+    }
+
+
+def rglru_decode(params, x, cache, cfg: ModelConfig):
+    """One-token step. x: [B, 1, D]."""
+    xr = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]))
+    xc, conv_state = _causal_conv(xr, params["conv"], state=cache["conv"])
+    a, b = _gates(params, xc[:, 0])
+    h = a * cache["h"] + b
+    out = (h[:, None].astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, params["w_out"])
+    return out, {"h": h, "conv": conv_state}

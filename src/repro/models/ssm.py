@@ -1,0 +1,181 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks of
+``chunk`` positions; within a chunk the output is a (masked) quadratic form
+— MXU-friendly matmuls — and across chunks a tiny recurrent state
+[heads, head_dim, state] is carried by a `lax.scan`.  This is exactly the
+"semiseparable matrix = block-diagonal + low-rank" decomposition of the
+paper, and it is what makes the 500k-token cell feasible: O(S * chunk)
+compute, O(1) decode state.
+
+Decode is the SSM recurrence: h = exp(dt*A) h + dt * B x ; y = C h.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, rms_norm
+
+__all__ = ["ssd_init", "ssd_apply", "ssd_decode", "init_ssd_cache"]
+
+
+def ssd_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    ns = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    # in_proj order: [z (gate) | x | B | C | dt]
+    zxbcdt = di + di + ns + ns + nh
+    return {
+        "w_in": dense_init(ks[0], (d, zxbcdt), cfg.dtype),
+        "conv": dense_init(ks[1], (cfg.conv_width, di + 2 * ns), cfg.dtype, scale=0.5),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # per-head decay
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d), cfg.dtype),
+    }
+
+
+def _split_in(params, x, cfg: ModelConfig):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * ns]
+    dt = zxbcdt[..., di + di + 2 * ns :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, *, state=None):
+    """Depthwise causal conv, width W.  state: [B, W-1, C] tail for decode."""
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(W)
+    )
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def ssd_apply(params, x, cfg: ModelConfig, *, chunk: int = 256,
+              initial_state=None) -> Tuple[jax.Array, dict]:
+    """Full-sequence SSD.  x: [B, S, D].  Returns (y, cache)."""
+    B, S, D = x.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_in(params, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv"])
+    xs = xbc[..., :di].reshape(B, S, nh, hd)
+    Bm = xbc[..., di : di + ns]  # [B,S,ns] (single group)
+    Cm = xbc[..., di + ns :]
+
+    a = -jnp.exp(params["a_log"])  # [nh] negative decay rates
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,nh]
+    dA = dt * a  # [B,S,nh] log-decay per step
+
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    CH = chunk
+    xs = xs.reshape(B, nc, CH, nh, hd).transpose(1, 0, 3, 2, 4)  # [nc,B,nh,CH,hd]
+    Bm = Bm.reshape(B, nc, CH, ns).transpose(1, 0, 2, 3)  # [nc,B,CH,ns]
+    Cm = Cm.reshape(B, nc, CH, ns).transpose(1, 0, 2, 3)
+    dA = dA.reshape(B, nc, CH, nh).transpose(1, 0, 3, 2)  # [nc,B,nh,CH]
+    dtc = dt.reshape(B, nc, CH, nh).transpose(1, 0, 3, 2)
+
+    def chunk_body(h0, inp):
+        xs_c, B_c, C_c, dA_c, dt_c = inp
+        # cumulative log decay within the chunk
+        cum = jnp.cumsum(dA_c, axis=-1)  # [B,nh,CH]
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) * dt_j  for j <= i
+        # (mask BEFORE exp: the upper triangle has positive exponents that
+        # overflow to inf and inf*0 = NaN)
+        diff = cum[..., :, None] - cum[..., None, :]  # [B,nh,CH,CH]
+        tri = jnp.arange(CH)[:, None] >= jnp.arange(CH)[None, :]
+        L = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        G = jnp.einsum(
+            "bis,bjs->bij", C_c, B_c, preferred_element_type=jnp.float32
+        )  # [B,CH,CH]
+        M = G[:, None] * L * dt_c[..., None, :]  # [B,nh,CH,CH]
+        y_intra = jnp.einsum(
+            "bhij,bhjd->bhid", M.astype(xs_c.dtype), xs_c,
+            preferred_element_type=jnp.float32,
+        )
+        # inter-chunk: carried state decayed to each position i, read out by C
+        y_inter = jnp.einsum(
+            "bis,bhds,bhi->bhid", C_c.astype(jnp.float32), h0, jnp.exp(cum),
+            preferred_element_type=jnp.float32,
+        )
+        y = (y_intra + y_inter).astype(xs_c.dtype)
+        # state update: h' = exp(cum_last) h0 + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+        wj = jnp.exp(cum[..., -1:] - cum) * dt_c  # [B,nh,CH]
+        h_new = h0 * jnp.exp(cum[..., -1])[..., None, None] + jnp.einsum(
+            "bhj,bjs,bhjd->bhds", wj, B_c.astype(jnp.float32),
+            xs_c.astype(jnp.float32), preferred_element_type=jnp.float32,
+        )
+        return h_new, y
+
+    h0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((B, nh, hd, ns), jnp.float32)
+    )
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xs, Bm, Cm, dA, dtc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nc * CH, nh, hd)[:, :S]
+    y = y + xs.transpose(1, 0, 3, 2, 4).reshape(B, nc * CH, nh, hd)[:, :S] * params[
+        "d_skip"
+    ][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], 1e-6)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssm": h_final, "conv": conv_state}
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int):
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros(
+            (batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), cfg.dtype
+        ),
+    }
+
+
+def ssd_decode(params, x, cache, cfg: ModelConfig):
+    """One-token recurrence. x: [B, 1, D]."""
+    B = x.shape[0]
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_in(params, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv"], state=cache["conv"])
+    xs = xbc[..., :di].reshape(B, nh, hd)
+    Bm = xbc[:, 0, di : di + ns]  # [B,ns]
+    Cm = xbc[:, 0, di + ns :]
+    a = -jnp.exp(params["a_log"])
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,nh]
+    decay = jnp.exp(dts * a)  # [B,nh]
+    h = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bs,bhd->bhds", dts, Bm.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bs,bhds->bhd", Cm.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], 1e-6)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssm": h, "conv": conv_state}

@@ -1,0 +1,314 @@
+"""Decoder-only LM assembly over heterogeneous layer segments.
+
+A config's ``segments`` is a tuple of ``(pattern, n_groups)``; each pattern
+entry is ``"<block>[+<mlp>]"`` with block in {attn, local, mla, ssd, rglru}
+and mlp in {mlp, moe}.  Parameters of a segment are stacked on a leading
+group axis and applied with `lax.scan` — HLO stays O(segment count), not
+O(depth), which is what keeps the 512-device dry-run compile times sane.
+
+The same assembly serves:
+  * ``forward``      — teacher-forced logits (train / eval / VLM prefix)
+  * ``prefill``      — forward + per-layer caches + last-position logits
+  * ``decode_step``  — one token against the caches (serve_step)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_apply,
+    attention_decode,
+    attn_init,
+    init_kv_cache,
+)
+from .common import ModelConfig, dense_init, mlp_apply, mlp_init, rms_norm
+from repro.sharding.context import constrain
+from .mla import init_mla_cache, mla_apply, mla_decode, mla_init
+from .moe import moe_apply, moe_init
+from .rglru import init_rglru_cache, rglru_apply, rglru_decode, rglru_init
+from .ssm import init_ssd_cache, ssd_apply, ssd_decode, ssd_init
+
+__all__ = [
+    "init_params",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_caches",
+    "parse_kind",
+]
+
+
+def parse_kind(kind: str) -> Tuple[str, Optional[str]]:
+    if "+" in kind:
+        b, m = kind.split("+")
+        return b, m
+    return kind, None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, kind: str, cfg: ModelConfig) -> dict:
+    block, mlp = parse_kind(kind)
+    ks = jax.random.split(key, 2)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if block in ("attn", "local"):
+        p["attn"] = attn_init(ks[0], cfg)
+    elif block == "mla":
+        p["attn"] = mla_init(ks[0], cfg)
+    elif block == "ssd":
+        p["ssd"] = ssd_init(ks[0], cfg)
+    elif block == "rglru":
+        p["rglru"] = rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown block kind {block!r}")
+    if mlp == "mlp":
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    elif mlp == "moe":
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe"] = moe_init(ks[1], cfg)
+    elif mlp is not None:
+        raise ValueError(f"unknown mlp kind {mlp!r}")
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 3 + len(cfg.segments))
+    vp = cfg.vocab_padded
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (vp, cfg.d_model), cfg.dtype, scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, vp), cfg.dtype)
+    segs = []
+    for s, (pattern, n_groups) in enumerate(cfg.segments):
+        kseg = jax.random.split(keys[2 + s], n_groups)
+
+        def one_group(k):
+            kp = jax.random.split(k, len(pattern))
+            return {
+                f"pos{j}": _block_init(kp[j], pattern[j], cfg)
+                for j in range(len(pattern))
+            }
+
+        segs.append(jax.vmap(one_group)(kseg))
+    params["segments"] = segs
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill body)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, x, kind: str, cfg: ModelConfig, *, collect_cache: bool):
+    """One layer. Returns (x, cache_or_None, aux)."""
+    block, mlp = parse_kind(kind)
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    cache = None
+    if block in ("attn", "local"):
+        window = cfg.window if block == "local" else None
+        out, (k, v) = attention_apply(p["attn"], h, cfg, window=window)
+        if collect_cache:
+            if window and k.shape[1] > window:
+                # ring-buffer layout: decode stores position p at slot p % W,
+                # so the retained window must be rolled to match
+                S = k.shape[1]
+                k = jnp.roll(k[:, -window:], S % window, axis=1)
+                v = jnp.roll(v[:, -window:], S % window, axis=1)
+            cache = {"k": k, "v": v}
+    elif block == "mla":
+        out, lat = mla_apply(p["attn"], h, cfg)
+        if collect_cache:
+            cache = {"ckv": lat}
+    elif block == "ssd":
+        out, st = ssd_apply(p["ssd"], h, cfg)
+        if collect_cache:
+            cache = st
+    elif block == "rglru":
+        out, st = rglru_apply(p["rglru"], h, cfg)
+        if collect_cache:
+            cache = st
+    x = x + out
+    if mlp == "mlp":
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg.mlp_type)
+    elif mlp == "moe":
+        out, aux = moe_apply(p["moe"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg)
+        x = x + out
+    return x, cache, aux
+
+
+def apply_remat(fn, policy: str):
+    """Wrap a scan body with the configured rematerialisation policy."""
+    if policy == "none":
+        return fn
+    if policy == "nothing":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn,
+            prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def _run_segments(params, x, cfg: ModelConfig, *, collect_cache: bool):
+    """Scan each segment. Returns (x, caches per segment, total aux)."""
+    caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for s, (pattern, n_groups) in enumerate(cfg.segments):
+        seg_params = params["segments"][s]
+
+        def group_body(carry, gp, _pattern=pattern):
+            h, aux = carry
+            cache_out = {}
+            for j, kind in enumerate(_pattern):
+                h, c, a = _apply_block(
+                    gp[f"pos{j}"], h, kind, cfg, collect_cache=collect_cache
+                )
+                aux = aux + a
+                if collect_cache:
+                    cache_out[f"pos{j}"] = c
+            # pin the scan carry's sharding: the saved-for-backward residuals
+            # dominate training memory (sharding/context.py)
+            h = constrain(h, "residual")
+            return (h, aux), cache_out if collect_cache else None
+
+        body = apply_remat(group_body, cfg.remat_policy)
+        (x, aux_total), seg_caches = jax.lax.scan(
+            body, (x, aux_total), seg_params
+        )
+        caches.append(seg_caches)
+    return x, caches, aux_total
+
+
+def forward(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    *,
+    prefix_embeds=None,
+    collect_cache: bool = False,
+):
+    """tokens: [B, S] -> logits [B, S(+P), vocab_padded].
+
+    ``prefix_embeds`` ([B, P, D], the [vlm]/[audio] frontend stub output) is
+    prepended to the token embeddings; logits cover the full sequence, the
+    caller slices the token region for the loss.
+    """
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, "residual")
+    x, caches, aux = _run_segments(params, x, cfg, collect_cache=collect_cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain(logits, "logits")
+    if collect_cache:
+        return logits, caches, aux
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract/zero caches mirroring the segment structure."""
+    caches = []
+    for pattern, n_groups in cfg.segments:
+        def one(kind):
+            block, _ = parse_kind(kind)
+            if block == "attn":
+                return init_kv_cache(cfg, batch, max_len)
+            if block == "local":
+                return init_kv_cache(cfg, batch, max_len, window=cfg.window)
+            if block == "mla":
+                return init_mla_cache(cfg, batch, max_len)
+            if block == "ssd":
+                return init_ssd_cache(cfg, batch)
+            if block == "rglru":
+                return init_rglru_cache(cfg, batch)
+            raise ValueError(kind)
+
+        one_group = {f"pos{j}": one(k) for j, k in enumerate(pattern)}
+        caches.append(
+            jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_groups, *x.shape)), one_group
+            )
+        )
+    return caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, prefix_embeds=None):
+    """Returns (last-position logits [B, V], caches)."""
+    logits, caches, _aux = forward(
+        params, tokens, cfg, prefix_embeds=prefix_embeds, collect_cache=True
+    )
+    return logits[:, -1], caches
+
+
+def decode_step(params, token, caches, cache_len, cfg: ModelConfig):
+    """token: [B, 1] int32; cache_len: [] int32 — valid positions in cache.
+
+    Returns (logits [B, vocab_padded], new caches).
+    """
+    x = params["embed"][token]  # [B,1,D]
+    new_caches = []
+    for s, (pattern, n_groups) in enumerate(cfg.segments):
+        seg_params = params["segments"][s]
+        seg_cache = caches[s]
+
+        def group_body(h, pc, _pattern=pattern):
+            gp, gc = pc
+            new_gc = {}
+            for j, kind in enumerate(_pattern):
+                block, mlp = parse_kind(kind)
+                p = gp[f"pos{j}"]
+                c = gc[f"pos{j}"]
+                hn = rms_norm(h, p["norm1"], cfg.norm_eps)
+                if block in ("attn", "local"):
+                    window = cfg.window if block == "local" else None
+                    out, nc = attention_decode(
+                        p["attn"], hn, c, cache_len, cfg, window=window
+                    )
+                elif block == "mla":
+                    out, nc = mla_decode(p["attn"], hn, c, cache_len, cfg)
+                elif block == "ssd":
+                    out, nc = ssd_decode(p["ssd"], hn, c, cfg)
+                elif block == "rglru":
+                    out, nc = rglru_decode(p["rglru"], hn, c, cfg)
+                h = h + out
+                if mlp == "mlp":
+                    h = h + mlp_apply(
+                        p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps), cfg.mlp_type
+                    )
+                elif mlp == "moe":
+                    out, _ = moe_apply(
+                        p["moe"], rms_norm(h, p["norm2"], cfg.norm_eps), cfg
+                    )
+                    h = h + out
+                new_gc[f"pos{j}"] = nc
+            return h, new_gc
+
+        x, nseg = jax.lax.scan(group_body, x, (seg_params, seg_cache))
+        new_caches.append(nseg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,3 @@
+from .adamw import AdamWState, OptConfig, adamw_init, adamw_update, lr_schedule
+
+__all__ = ["AdamWState", "OptConfig", "adamw_init", "adamw_update", "lr_schedule"]

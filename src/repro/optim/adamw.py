@@ -1,0 +1,102 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Optimizer state is sharded exactly like the parameters (the rules in
+sharding/rules.py put the big axes over ('data','model') — ZeRO-style), so
+the update is purely element-wise and communication-free; the only
+collective in the optimizer path is the scalar global-norm all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any  # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # copy=True: an f32 param leaf would otherwise ALIAS its master twin,
+    # and donating params+opt_state together would donate one buffer twice
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptConfig):
+    """Returns (new_params_in_model_dtype, new_state, metrics).
+
+    ``params`` supplies the model dtypes the new parameters are cast back to
+    (bf16 compute / fp32 master split).
+    """
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-20
+    )
+    scale = jnp.minimum(1.0, cfg.clip_norm / gnorm)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1t
+        vh = v / b2t
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return (m, v, p)
+
+    out = jax.tree.map(
+        upd, grads, state.m, state.v, state.master,
+    )
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=is_triple)
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=is_triple)
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=is_triple)
+    new_params = jax.tree.map(lambda mm, p: mm.astype(p.dtype), master, params)
+    return (
+        new_params,
+        AdamWState(step=step, master=master, m=m, v=v),
+        {"grad_norm": gnorm, "lr": lr},
+    )

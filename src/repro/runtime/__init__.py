@@ -1,0 +1,3 @@
+from .fault import FailureInjector, Heartbeat, ResilientTrainer, StragglerWatchdog
+
+__all__ = ["FailureInjector", "Heartbeat", "ResilientTrainer", "StragglerWatchdog"]

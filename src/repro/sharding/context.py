@@ -1,0 +1,78 @@
+"""Ambient activation-sharding rules.
+
+The model code is mesh-agnostic; the launcher publishes a {key ->
+PartitionSpec} dict here and the model calls ``constrain(x, key)`` at the
+few points that matter.  The big one: the layer-scan carry ("residual") —
+without a constraint XLA saves one *unsharded* [B, S, D] residual per layer
+for the backward pass (74 GB/device for yi-34b train_4k); sequence-sharding
+it over `model` divides that by 16.
+
+Keys used by the models:
+  residual   — [B, S, D] embedding output / layer-scan carry
+  logits     — [B, S, vocab_padded]
+"""
+
+from __future__ import annotations
+
+import contextvars
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+__all__ = ["activation_rules", "constrain", "default_rules"]
+
+_RULES: contextvars.ContextVar[Optional[Dict[str, PartitionSpec]]] = (
+    contextvars.ContextVar("activation_rules", default=None)
+)
+
+
+@contextmanager
+def activation_rules(rules: Optional[Dict[str, PartitionSpec]]):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x, key: str):
+    rules = _RULES.get()
+    if not rules or key not in rules:
+        return x
+    spec = rules[key]
+    # drop axes that don't divide the corresponding dim
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def get_rule(key: str, default=None):
+    """Raw access to a published rule (non-PartitionSpec entries allowed)."""
+    rules = _RULES.get()
+    if not rules:
+        return default
+    return rules.get(key, default)
+
+
+def default_rules(mesh, batch: int, seq: int, d_model: int):
+    """Sequence-sharded residuals when divisible; batch over dp axes."""
+    from .rules import dp_axes
+
+    dp = dp_axes(mesh)
+    import numpy as np
+
+    dp_n = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b_ax = dp if (dp and batch % dp_n == 0) else None
+    model_n = mesh.shape.get("model", 1)
+    s_ax = "model" if seq % model_n == 0 else None
+    return {
+        "residual": PartitionSpec(b_ax, s_ax, None),
+        "logits": PartitionSpec(b_ax, s_ax, None),
+        # expert-parallel MoE dispatch (moe.py reads these raw entries)
+        "moe_ep_axis": "model" if model_n > 1 else None,
+        "moe_dp_axes": b_ax,
+        "mesh": mesh,
+    }

@@ -1,0 +1,193 @@
+"""Logical->physical sharding rules for the production meshes.
+
+Posture (DESIGN.md §4.1/§5): **no head-divisibility assumptions anywhere**.
+
+* Parameters: ZeRO/FSDP-style — 2-D+ weights shard their input dim over
+  `data` and output dim over `model` when divisible (both checked per leaf);
+  embedding/lm-head shard the vocab dim over `model`; norms/biases/scalars
+  replicate.  Optimizer state inherits the parameter specs (element-wise
+  update = communication-free).
+* Batches: batch dim over (`pod`, `data`) when divisible (long_500k has
+  batch 1 — replicated), sequence unsharded at input (XLA propagates).
+* Caches: KV/latent sequence dim over `model`; SSM/LRU state heads/width
+  over `model`; batch over dp axes when divisible.
+
+Everything returns `PartitionSpec`s; the launcher turns them into
+NamedShardings against whichever mesh is active (1-pod or 2-pod).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+__all__ = [
+    "dp_axes",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "named",
+]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def named(mesh: Mesh, tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _weight_spec(
+    shape, mesh: Mesh, path_str: str, cfg: ModelConfig, *, mode: str = "train"
+) -> P:
+    """Spec for one parameter leaf (shape may include a leading group dim).
+
+    mode='train': ZeRO/FSDP posture — input dim over `data`, output over
+    `model` (optimizer state forces the spread).
+    mode='serve': weights replicate over `data` (no optimizer state; decode
+    would otherwise all-gather every layer's weights every token — §Perf
+    iteration 2 measured that as the entire collective term of decode_32k).
+    """
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1) if mode == "train" else 10**9  # never divides
+    dims = list(shape)
+    lead = []
+    if "segments" in path_str or "_layers" in path_str:
+        lead = [None]  # stacked group axis stays unsharded
+        dims = dims[1:]
+    if len(dims) <= 1:  # norms, biases, scalars
+        return P(*lead, *([None] * len(dims)))
+    # embedding tables / positional tables / heads: vocab over 'model'
+    if any(k in path_str for k in ("embed", "lm_head", "enc_pos", "dec_pos")):
+        if "lm_head" in path_str:  # [D, V]
+            spec = [None, "model" if dims[1] % model_n == 0 else None]
+        else:  # [V, D]
+            spec = ["model" if dims[0] % model_n == 0 else None, None]
+        return P(*lead, *spec)
+    if "router" in path_str:
+        return P(*lead, *([None] * len(dims)))
+    if "conv" in path_str:  # [W, C]: channel over model
+        return P(*lead, None, "model" if dims[1] % model_n == 0 else None)
+    if len(dims) == 3:  # stacked experts [E, in, out]
+        if cfg.moe_shard_experts and dims[0] % model_n == 0:
+            return P(*lead, "model", "data" if dims[1] % data_n == 0 else None, None)
+        return P(
+            *lead,
+            None,
+            "data" if dims[1] % data_n == 0 else None,
+            "model" if dims[2] % model_n == 0 else None,
+        )
+    # generic 2-D weight [in, out]: FSDP over data, TP over model
+    return P(
+        *lead,
+        "data" if dims[0] % data_n == 0 else None,
+        "model" if dims[1] % model_n == 0 else None,
+    )
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh: Mesh, *, mode: str = "train"):
+    """Pytree of PartitionSpec matching ``params_shape`` (ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        path_str = "/".join(str(p) for p in path)
+        specs.append(_weight_spec(leaf.shape, mesh, path_str, cfg, mode=mode))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def _batch_axis(mesh: Mesh, batch: int):
+    axes = dp_axes(mesh)
+    if axes and batch % _axis_size(mesh, axes) == 0:
+        return axes
+    # try intra-pod data only
+    if "data" in mesh.shape and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, *, kind: str) -> Dict[str, P]:
+    """Specs for the input batch dict of ``kind`` in {train, prefill, decode}."""
+    b = _batch_axis(mesh, batch)
+    if kind in ("train", "prefill"):
+        specs: Dict[str, P] = {"tokens": P(b, None), "labels": P(b, None)}
+        if cfg.frontend == "vision":
+            specs["prefix"] = P(b, None, None)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = P(b, None, None)
+        if kind == "prefill":
+            specs.pop("labels", None)
+        return specs
+    if kind == "decode":
+        return {"token": P(b, None), "cache_len": P()}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, caches_shape, mesh: Mesh, batch: int):
+    """Shard cache leaves: seq dim over 'model', batch over dp axes."""
+    b = _batch_axis(mesh, batch)
+    model_n = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf) -> P:
+        # every cache leaf is [n_groups/L, B, ...] (scan-stacked)
+        shape = leaf.shape
+        path_str = "/".join(str(p) for p in path)
+        lead = [None]
+        dims = list(shape[1:])
+        spec = [b]  # batch dim
+        rest = dims[1:]
+        if "ckv" in path_str or path_str.endswith("k") or path_str.endswith("v"):
+            # [B, L, ...]: shard L over model when divisible
+            if rest and rest[0] % model_n == 0:
+                spec.append("model")
+                rest = rest[1:]
+        elif "ssm" in path_str:
+            # [B, nh, hd, ns]: shard heads over model when divisible
+            if rest and rest[0] % model_n == 0:
+                spec.append("model")
+                rest = rest[1:]
+        elif path_str.endswith("h"):
+            # rglru [B, w]
+            if rest and rest[0] % model_n == 0:
+                spec.append("model")
+                rest = rest[1:]
+        elif "conv" in path_str:
+            # [B, W-1, C]: shard channels
+            if len(rest) == 2 and rest[1] % model_n == 0:
+                spec.extend([None, "model"])
+                rest = []
+        spec.extend([None] * len(rest))
+        return P(*lead, *spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat]
+    )

@@ -1,0 +1,30 @@
+"""Cross-entropy over the padded vocab with ignore-index masking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+__all__ = ["lm_loss"]
+
+IGNORE = -1
+
+
+def lm_loss(logits, labels, cfg: ModelConfig):
+    """logits: [B, S, vocab_padded] (any float dtype); labels: [B, S] int32
+    with IGNORE at masked positions. Returns (mean loss, token count)."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab entries out of the softmax
+    if cfg.vocab_padded > cfg.vocab_size:
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, n

@@ -1,0 +1,96 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds the jit-able ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function: forward (+ MoE aux loss), backward,
+AdamW with fp32 master, optional gradient accumulation over microbatches
+(sequential scan — trades step latency for activation memory).  Donation of
+params/opt_state is declared at jit time by the launcher.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving twins
+(serve_step in the dry-run = one decode token against a full-length cache).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_decode, model_forward, model_prefill
+from repro.models.common import ModelConfig
+from repro.optim import OptConfig, adamw_update
+from .loss import lm_loss
+
+__all__ = ["make_loss_fn", "make_train_step", "make_prefill_step", "make_decode_step"]
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, aux = model_forward(params, batch, cfg)
+        ce, n = lm_loss(logits, batch["labels"], cfg)
+        loss = ce + AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux, "tokens": n}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig, *, microbatches: int = 1):
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), ms = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, caches = model_prefill(params, batch, cfg)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, sample: bool = False):
+    def decode_step(params, batch, caches):
+        logits, new_caches = model_decode(
+            params, batch["token"], caches, batch["cache_len"], cfg
+        )
+        if sample:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_caches
+
+    return decode_step

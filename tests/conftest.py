@@ -1,0 +1,32 @@
+import os
+import sys
+from pathlib import Path
+
+# package import without install
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+from repro.core import CSRGraph, erdos_renyi, partition_into_n_blocks
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return erdos_renyi(600, 4800, seed=11)
+
+
+@pytest.fixture(scope="session")
+def small_blocked(small_graph):
+    return partition_into_n_blocks(small_graph, 5)
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    # 12-vertex connected graph with known structure
+    rng = np.random.default_rng(5)
+    edges = [(i, (i + 1) % 12) for i in range(12)]
+    edges += [(i, (i + 3) % 12) for i in range(12)]
+    edges += [(0, 6), (2, 9), (4, 10)]
+    return CSRGraph.from_edges(np.array(edges), 12)

@@ -1,0 +1,93 @@
+"""Skewed storage, Eq.4 bucketing, triangular scheduling (paper §4)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    WalkBatch,
+    bucket_ids,
+    make_scheduler,
+    skewed_block_assignment,
+    split_into_buckets,
+    standard_block_io_bound,
+    traditional_block_assignment,
+    triangular_block_io_bound,
+    triangular_pairs,
+)
+
+
+def _random_batch(rng, n, V):
+    return WalkBatch(
+        rng.integers(0, V, n), rng.integers(0, V, n),
+        rng.integers(0, V, n), rng.integers(0, 100, n).astype(np.int32),
+    )
+
+
+@given(nb=st.integers(2, 40))
+@settings(max_examples=30, deadline=None)
+def test_triangular_bound_formula(nb):
+    # Eq. 3: enumerate the schedule and count loads
+    total = 0
+    currents = 0
+    for b, ancs in triangular_pairs(nb):
+        currents += 1
+        total += len(ancs)
+    assert currents == nb - 1
+    assert currents + total == triangular_block_io_bound(nb)
+    assert standard_block_io_bound(nb) == nb * nb
+    # ~50% saving for large nb (Eq. 2 vs Eq. 3)
+    if nb >= 10:
+        assert triangular_block_io_bound(nb) / standard_block_io_bound(nb) < 0.6
+
+
+@given(
+    n=st.integers(1, 300),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=25, deadline=None)
+def test_skewed_assignment_is_min(n, seed):
+    rng = np.random.default_rng(seed)
+    starts = np.array([0, 100, 250, 400, 600])
+    batch = _random_batch(rng, n, 600)
+    assoc = skewed_block_assignment(starts, batch)
+    trad = traditional_block_assignment(starts, batch)
+    from repro.core import block_of
+
+    bp = block_of(starts, batch.prev)
+    bc = block_of(starts, batch.cur)
+    np.testing.assert_array_equal(assoc, np.minimum(bp, bc))
+    np.testing.assert_array_equal(trad, bc)
+
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 99), b=st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_bucket_rule_eq4(n, seed, b):
+    rng = np.random.default_rng(seed)
+    starts = np.array([0, 100, 250, 400, 600])
+    batch = _random_batch(rng, n, 600)
+    ids = bucket_ids(starts, batch, b)
+    from repro.core import block_of
+
+    bp = block_of(starts, batch.prev)
+    bc = block_of(starts, batch.cur)
+    np.testing.assert_array_equal(ids, np.where(bp == b, bc, bp))
+    # and the dict split preserves every walk exactly once
+    buckets = split_into_buckets(starts, batch, b)
+    assert sum(len(v) for v in buckets.values()) == n
+
+
+def test_schedulers_drain():
+    counts = np.array([5, 0, 3, 9])
+    hops = np.array([2.0, np.inf, 1.0, 7.0])
+    assert make_scheduler("iteration", 4).next_block(counts, hops) == 0
+    assert make_scheduler("max_sum", 4).next_block(counts, hops) == 3
+    assert make_scheduler("min_height", 4).next_block(counts, hops) == 2
+    alpha = make_scheduler("alphabet", 4)
+    assert [alpha.next_block(counts, hops) for _ in range(4)] == [0, 1, 2, 3]
+    it = make_scheduler("iteration", 4)
+    seq = [it.next_block(counts, hops) for _ in range(3)]
+    assert seq == [0, 2, 3]  # skips empty block 1
+    # all return None when no walks remain
+    zero = np.zeros(4)
+    for name in ("iteration", "alphabet", "max_sum", "min_height", "graphwalker"):
+        assert make_scheduler(name, 4).next_block(zero, hops) is None

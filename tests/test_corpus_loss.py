@@ -1,0 +1,91 @@
+"""Walk corpus -> LM batch pipeline + loss masking + optimizer."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.data import BOS_OFFSET, WalkCorpus, skipgram_pairs
+from repro.optim import OptConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.loss import IGNORE, lm_loss
+
+
+def _corpus(n=40, L=16, V=100, seed=0):
+    rng = np.random.default_rng(seed)
+    walks = rng.integers(0, V, (n, L + 1)).astype(np.int32)
+    walks[5, 9:] = -1  # one early-terminated walk
+    return WalkCorpus.from_walks(walks, V)
+
+
+def test_batch_packing_shapes_and_shift():
+    corpus = _corpus()
+    it = corpus.batches(4, 12, epochs=1, seed=1)
+    b = next(it)
+    assert b["tokens"].shape == (4, 12)
+    assert b["labels"].shape == (4, 12)
+    # labels are the next-token shift within each row
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    flat_t = b["tokens"].reshape(-1)
+    # vertex tokens are offset by BOS
+    assert flat_t.max() < corpus.vocab_size
+    assert (flat_t == 0).any(), "BOS separators present"
+
+
+def test_cursor_resume_determinism():
+    corpus = _corpus()
+    ref = list(corpus.batches(2, 10, epochs=1, seed=3))
+    # replay from the cursor of batch k
+    k = 2
+    resumed = list(
+        corpus.batches(2, 10, cursor=ref[k - 1]["cursor"], epochs=1, seed=3)
+    )
+    # Note: resuming re-seeds the same permutation (seed fixed), so batch k
+    # onward must match except buffered remainder; compare walk coverage
+    np.testing.assert_array_equal(ref[k]["tokens"], resumed[0]["tokens"])
+
+
+def test_skipgram_pairs_within_window():
+    corpus = _corpus()
+    c, x = skipgram_pairs(corpus.walks, window=3, max_pairs=500, seed=0)
+    assert c.shape == x.shape and c.shape[0] <= 500
+    assert (c >= 0).all() and (x >= 0).all()
+
+
+def test_lm_loss_masking():
+    cfg = reduced_config("qwen1.5-0.5b")
+    B, S, V = 2, 6, cfg.vocab_padded
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((B, S, V)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    labels = labels.at[0, :3].set(IGNORE)
+    loss, n = lm_loss(logits, labels, cfg)
+    assert int(n) == B * S - 3
+    assert np.isfinite(float(loss))
+    # perfect logits -> ~0 loss
+    perfect = jnp.full((B, S, V), -30.0)
+    perfect = perfect.at[
+        jnp.arange(B)[:, None], jnp.arange(S)[None, :], jnp.abs(labels)
+    ].set(30.0)
+    loss_p, _ = lm_loss(perfect, labels, cfg)
+    assert float(loss_p) < 1e-3
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=0.2, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        g = jax.grad(f)(params)
+        params, opt, m = adamw_update(g, opt, params, cfg)
+    assert float(f(params)) < 1e-3
+    assert float(m["grad_norm"]) < 1.0
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-6

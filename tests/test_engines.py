@@ -1,0 +1,173 @@
+"""Engine correctness + the paper's I/O claims at test scale.
+
+The decisive correctness check: the *empirical second-order transition
+frequencies* of walks produced by each engine match the analytic Node2vec
+edge-edge distribution (Eq. 1) — engines may differ in I/O but must sample
+the same process.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BiBlockEngine,
+    InMemoryWalker,
+    Node2vec,
+    PlainBucketEngine,
+    SOGWEngine,
+    WalkTask,
+    block_of,
+    deepwalk_task,
+    partition_into_n_blocks,
+    prnv_task,
+    rwnv_task,
+)
+
+
+def analytic_step_probs(g, u, v, p, q):
+    nb = g.neighbors(v)
+    w = np.ones(len(nb))
+    for i, z in enumerate(nb):
+        if z == u:
+            w[i] = 1.0 / p
+        elif z in g.neighbors(u):
+            w[i] = 1.0
+        else:
+            w[i] = 1.0 / q
+    return nb, w / w.sum()
+
+
+def transition_frequencies(corpus, g, p, q, max_pairs=40):
+    """Chi-square-ish comparison of observed next-vertex freqs vs Eq. 1."""
+    from collections import Counter, defaultdict
+
+    obs = defaultdict(Counter)
+    for row in corpus:
+        row = row[row >= 0]
+        for t in range(1, len(row) - 1):
+            obs[(row[t - 1], row[t])][row[t + 1]] += 1
+    checked = 0
+    for (u, v), counter in sorted(obs.items(), key=lambda kv: -sum(kv[1].values())):
+        total = sum(counter.values())
+        if total < 400:
+            continue
+        nb, probs = analytic_step_probs(g, u, v, p, q)
+        emp = np.array([counter.get(z, 0) for z in nb]) / total
+        np.testing.assert_allclose(emp, probs, atol=6 * np.sqrt(probs.max() / total) + 0.02)
+        checked += 1
+        if checked >= max_pairs:
+            break
+    assert checked > 0, "no (u,v) pair had enough visits to test"
+
+
+@pytest.mark.parametrize("p,q", [(1.0, 1.0), (4.0, 0.25)])
+def test_inmemory_matches_analytic_transition(tiny_graph, p, q):
+    task = rwnv_task(p=p, q=q, walks_per_vertex=400, length=12, seed=3)
+    bg = partition_into_n_blocks(tiny_graph, 3)
+    res = InMemoryWalker(bg, task).run()
+    transition_frequencies(res.corpus, tiny_graph, p, q)
+
+
+@pytest.mark.parametrize("p,q", [(1.0, 1.0), (0.5, 2.0)])
+def test_biblock_matches_analytic_transition(tiny_graph, p, q):
+    task = rwnv_task(p=p, q=q, walks_per_vertex=400, length=10, seed=4)
+    bg = partition_into_n_blocks(tiny_graph, 3)
+    res = BiBlockEngine(bg, task, record_walks=True).run()
+    transition_frequencies(res.corpus, tiny_graph, p, q)
+
+
+def test_all_walks_complete(small_blocked):
+    task = rwnv_task(walks_per_vertex=2, length=12, seed=0)
+    for Engine in (BiBlockEngine, PlainBucketEngine, SOGWEngine):
+        res = Engine(small_blocked, task).run()
+        assert res.stats.steps_sampled == res.num_walks * task.length, Engine
+        assert res.endpoint_counts.sum() == res.num_walks
+
+
+def test_biblock_beats_pb_block_ios(small_blocked):
+    """Paper Table 3: Bi-Block cuts block I/Os to ~50% of plain bucket."""
+    task = rwnv_task(walks_per_vertex=2, length=12, seed=0)
+    r_bb = BiBlockEngine(small_blocked, task).run()
+    r_pb = PlainBucketEngine(small_blocked, task).run()
+    ratio = r_bb.stats.block_ios / max(r_pb.stats.block_ios, 1)
+    assert ratio < 0.75, f"expected ~0.5, got {ratio:.2f}"
+    # and simulated I/O time improves at least as much
+    assert r_bb.stats.sim_block_io_time < r_pb.stats.sim_block_io_time
+
+
+def test_sogw_pays_vertex_ios_biblock_does_not(small_blocked):
+    """Paper Fig. 1(a): second-order on SOGW is dominated by vertex I/Os."""
+    task = rwnv_task(walks_per_vertex=2, length=12, seed=0)
+    r_so = SOGWEngine(small_blocked, task).run()
+    r_bb = BiBlockEngine(small_blocked, task).run()
+    assert r_so.stats.vertex_ios > 10 * max(r_bb.stats.vertex_ios, 1)
+    assert r_bb.stats.vertex_ios == 0
+
+
+def test_sgsc_cache_reduces_vertex_ios(small_blocked):
+    task = rwnv_task(walks_per_vertex=2, length=12, seed=0)
+    r_so = SOGWEngine(small_blocked, task).run()
+    r_sg = SOGWEngine(small_blocked, task, static_cache=True).run()
+    assert r_sg.stats.vertex_ios < r_so.stats.vertex_ios
+
+
+def test_prnv_terminates_and_estimates(small_blocked):
+    g = small_blocked.graph
+    task = prnv_task(7, g.num_vertices, samples_per_vertex=1, seed=1)
+    res = BiBlockEngine(small_blocked, task).run()
+    assert res.endpoint_counts.sum() == res.num_walks
+    ppr = res.ppr_estimate()
+    assert abs(ppr.sum() - 1.0) < 1e-9
+    # restart decay=0.85, max len 20: mean hops ~ geometric, well below max
+    assert res.stats.steps_sampled < res.num_walks * task.length
+
+
+def test_first_order_deepwalk(small_blocked):
+    """Paper §7.8: the engine also runs first-order tasks."""
+    task = deepwalk_task(walks_per_vertex=2, length=10, seed=0)
+    res = BiBlockEngine(small_blocked, task).run()
+    assert res.stats.steps_sampled == res.num_walks * task.length
+
+
+def test_skewed_pool_invariant(small_blocked):
+    """App. B: every persisted walk has B(u) != B(v)."""
+    task = rwnv_task(walks_per_vertex=1, length=8, seed=0)
+    eng = BiBlockEngine(small_blocked, task)
+    eng._initialize()
+    starts = small_blocked.block_starts
+    for b, entries in eng.pools.items():
+        for batch, _wid in entries:
+            bp = block_of(starts, batch.prev)
+            bc = block_of(starts, batch.cur)
+            assert np.all(bp != bc)
+            np.testing.assert_array_equal(np.minimum(bp, bc), b)
+
+
+def test_loader_switches_to_ondemand_late(small_blocked):
+    """Paper §7.4 / Fig. 10: as walks drain, on-demand loading kicks in."""
+    task = prnv_task(3, small_blocked.graph.num_vertices,
+                     samples_per_vertex=2, seed=0)
+    eng = BiBlockEngine(small_blocked, task, loading="auto")
+    res = eng.run()
+    assert res.stats.ondemand_ios > 0, "on-demand path never used"
+    assert res.loader_summary["full_samples"] > 0
+
+
+def test_weighted_graph_alias_sampling(tiny_graph):
+    import numpy as np
+
+    from repro.core import CSRGraph, partition_into_n_blocks
+
+    g = tiny_graph
+    rng = np.random.default_rng(0)
+    w = (rng.random(g.num_edges) * 3 + 0.1).astype(np.float32)
+    gw = CSRGraph(g.indptr, g.indices, w)
+    bg = partition_into_n_blocks(gw, 3)
+    task = deepwalk_task(walks_per_vertex=300, length=4, seed=0)
+    res = InMemoryWalker(bg, task).run()
+    # empirical first-step distribution from vertex 0 matches weights
+    first = res.corpus[res.corpus[:, 0] == 0][:, 1]
+    nb = g.neighbors(0)
+    wv = gw.neighbor_weights(0)
+    emp = np.array([(first == z).sum() for z in nb]) / len(first)
+    np.testing.assert_allclose(emp, wv / wv.sum(), atol=0.06)

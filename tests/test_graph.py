@@ -1,0 +1,94 @@
+"""CSR graph + blocked storage invariants (unit + hypothesis property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockedGraph,
+    CSRGraph,
+    block_of,
+    erdos_renyi,
+    greedy_locality_partition,
+    partition_into_n_blocks,
+    sequential_partition,
+)
+
+
+def test_csr_from_edges_symmetric():
+    g = CSRGraph.from_edges(np.array([[0, 1], [1, 2], [2, 0]]), 4)
+    assert g.num_vertices == 4
+    # symmetrized: each edge twice
+    assert g.num_edges == 6
+    assert list(g.neighbors(0)) == [1, 2]
+    assert list(g.neighbors(3)) == []
+
+
+def test_csr_rows_sorted(small_graph):
+    for v in range(0, small_graph.num_vertices, 37):
+        nb = small_graph.neighbors(v)
+        assert np.all(np.diff(nb) > 0), "rows must be strictly sorted (dedup)"
+
+
+def test_no_self_loops(small_graph):
+    for v in range(0, small_graph.num_vertices, 23):
+        assert v not in small_graph.neighbors(v)
+
+
+@given(
+    n=st.integers(8, 200),
+    m=st.integers(10, 600),
+    nb=st.integers(1, 7),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_partition_covers_all_vertices(n, m, nb, seed):
+    g = erdos_renyi(n, m, seed=seed)
+    bg = partition_into_n_blocks(g, nb)
+    assert bg.block_starts[0] == 0
+    assert bg.block_starts[-1] == g.num_vertices
+    assert np.all(np.diff(bg.block_starts) > 0)
+    # every vertex belongs to exactly one block
+    vs = np.arange(g.num_vertices)
+    b = block_of(bg.block_starts, vs)
+    assert b.min() >= 0 and b.max() < bg.num_blocks
+
+
+def test_sequential_partition_respects_budget(small_graph):
+    budget = 20_000
+    bg = sequential_partition(small_graph, budget)
+    for b in range(bg.num_blocks):
+        blk = bg.materialize_block(b)
+        if blk.nverts > 1:  # single-vertex blocks may exceed by necessity
+            assert blk.nbytes_full() <= budget
+
+
+def test_materialize_block_roundtrip(small_blocked):
+    g = small_blocked.graph
+    for b in range(small_blocked.num_blocks):
+        blk = small_blocked.materialize_block(b)
+        for off, v in enumerate(
+            range(blk.start, blk.start + min(blk.nverts, 17))
+        ):
+            lo, hi = blk.indptr[off], blk.indptr[off + 1]
+            np.testing.assert_array_equal(
+                blk.indices[lo:hi], g.neighbors(v)
+            )
+
+
+def test_greedy_partition_lowers_edge_cut():
+    g = erdos_renyi(400, 3000, seed=2)
+    seq = partition_into_n_blocks(g, 4)
+    _, bg, perm = greedy_locality_partition(g, 4, rounds=2, seed=0)
+    # permutation must be a bijection
+    assert sorted(perm.tolist()) == list(range(g.num_vertices))
+    assert bg.edge_cut() <= seq.edge_cut() + 0.05
+
+
+def test_activated_load_bytes(small_blocked):
+    g = small_blocked.graph
+    vs = np.array([0, 1, 1, 5])
+    expect = 8 * 3 + 4 * int(
+        g.out_degree(np.array([0, 1, 5])).sum()
+    )
+    assert small_blocked.activated_load_bytes(vs) == expect

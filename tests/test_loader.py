@@ -1,0 +1,53 @@
+"""Learning-based block loading model (paper §5)."""
+
+import numpy as np
+
+from repro.core import BlockLoadingModel, LinearCostModel
+
+
+def test_linear_fit_recovers_coefficients():
+    rng = np.random.default_rng(0)
+    m = LinearCostModel(with_intercept=True)
+    a, b = 3.5, 0.8
+    for _ in range(200):
+        x = rng.random()
+        m.add(x, a * x + b + rng.normal(0, 1e-3))
+    af, bf = m.fit()
+    assert abs(af - a) < 0.01 and abs(bf - b) < 0.01
+
+    m0 = LinearCostModel(with_intercept=False)
+    for _ in range(200):
+        x = rng.random()
+        m0.add(x, 2.0 * x + rng.normal(0, 1e-3))
+    a0, b0 = m0.fit()
+    assert abs(a0 - 2.0) < 0.02 and b0 == 0.0
+
+
+def test_eta0_threshold_and_choice():
+    """Synthetic costs with known crossover eta0 = b_f/(a_o-a_f) (Eq. 5)."""
+    model = BlockLoadingModel(num_blocks=2, mode="auto", min_samples=3)
+    a_f, b_f, a_o = 1.0, 0.10, 3.0  # eta0 = 0.05
+    for eta in np.linspace(0.01, 0.5, 20):
+        model.observe(0, float(eta), a_f * eta + b_f, "full")
+        model.observe(0, float(eta), a_o * eta, "ondemand")
+    eta0 = model.eta0(0)
+    assert abs(eta0 - 0.05) < 0.005
+    nv = 1000
+    assert model.choose(0, int(0.2 * nv), nv) == "full"  # eta 0.2 > 0.05
+    assert model.choose(0, int(0.01 * nv), nv) == "ondemand"
+
+
+def test_forced_modes():
+    m = BlockLoadingModel(3, mode="train_full")
+    assert m.choose(0, 1, 100) == "full"
+    m = BlockLoadingModel(3, mode="train_ondemand")
+    assert m.choose(0, 99, 100) == "ondemand"
+
+
+def test_global_fallback_used_before_block_samples():
+    model = BlockLoadingModel(num_blocks=4, mode="auto", min_samples=2)
+    for eta in (0.1, 0.2, 0.3):
+        model.observe(1, eta, 1.0 * eta + 0.05, "full")
+        model.observe(1, eta, 2.0 * eta, "ondemand")
+    # block 3 has no samples; global model should drive the threshold
+    assert abs(model.eta0(3) - 0.05) < 0.01

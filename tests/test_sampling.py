@@ -1,0 +1,84 @@
+"""Alias tables, binary-search membership, node2vec acceptance."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (
+    alias_draw,
+    build_alias,
+    build_alias_rows,
+    membership,
+    node2vec_accept_prob,
+)
+
+
+@given(
+    n=st.integers(1, 64),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_alias_distribution_matches(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random(n) + 0.01
+    J, q = build_alias(w)
+    # exact check: alias tables encode p_i = (q_i + sum_{j: J_j = i} (1 - q_j)) / n
+    p = q.astype(np.float64).copy()
+    for j in range(n):
+        if J[j] != j:
+            p[J[j]] += 1.0 - q[j]
+    p /= n
+    np.testing.assert_allclose(p, w / w.sum(), atol=1e-6)
+
+
+def test_alias_draw_statistics():
+    w = np.array([1.0, 2.0, 3.0, 6.0])
+    J, q = build_alias(w)
+    n = 200_000
+    k = jax.random.PRNGKey(0)
+    u1, u2 = jax.random.uniform(k, (2, n))
+    rs = jnp.zeros(n, jnp.int32)
+    deg = jnp.full(n, 4, jnp.int32)
+    draws = alias_draw(jnp.asarray(J), jnp.asarray(q), rs, deg, u1, u2)
+    freq = np.bincount(np.asarray(draws), minlength=4) / n
+    np.testing.assert_allclose(freq, w / w.sum(), atol=0.01)
+
+
+@given(
+    row=st.lists(st.integers(0, 1000), min_size=0, max_size=50),
+    probe=st.integers(0, 1000),
+)
+@settings(max_examples=60, deadline=None)
+def test_membership_binary_search(row, probe):
+    row_sorted = np.unique(np.array(row, dtype=np.int32))
+    pad = np.full(64, -1, np.int32)
+    pad[: len(row_sorted)] = row_sorted
+    got = membership(
+        jnp.asarray(pad),
+        jnp.zeros(1, jnp.int32),
+        jnp.full(1, len(row_sorted), jnp.int32),
+        jnp.full(1, probe, jnp.int32),
+        n_iters=8,
+    )
+    assert bool(got[0]) == (probe in row_sorted.tolist())
+
+
+def test_node2vec_accept_prob_cases():
+    p, q = 2.0, 0.5
+    M = max(1.0, 1 / p, 1 / q)  # = 2
+    z = jnp.array([5, 7, 9])
+    u = jnp.array([5, 5, 5])
+    is_nb = jnp.array([False, True, False])
+    acc = node2vec_accept_prob(z, u, is_nb, p, q)
+    np.testing.assert_allclose(
+        np.asarray(acc), [1 / p / M, 1.0 / M, 1 / q / M], atol=1e-6
+    )
+
+
+def test_build_alias_rows_pads_identity():
+    indptr = np.array([0, 2, 2, 5], np.int32)
+    J, q = build_alias_rows(indptr, 3, 8, None)
+    assert J.shape == (8,)
+    # unweighted: q == 1 everywhere (uniform -> no alias redirection)
+    np.testing.assert_allclose(q, 1.0)

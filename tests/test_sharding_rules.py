@@ -1,0 +1,112 @@
+"""Sharding rules must produce divisible specs for every arch x mesh —
+this is the CPU-cheap version of the dry-run's guarantee."""
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.models import init_params_shape, model_caches
+from repro.sharding import batch_specs, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Shape-only stand-in (constructing 256 fake devices is not needed to
+    check divisibility)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+MESHES = [
+    FakeMesh({"data": 16, "model": 16}),
+    FakeMesh({"pod": 2, "data": 16, "model": 16}),
+]
+
+
+def _check_divisible(specs, shapes, mesh, where):
+    from jax.sharding import PartitionSpec
+
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec)
+    )[0]
+    flat_l = jax.tree.leaves(shapes)
+    assert len(flat_s) == len(flat_l)
+    for (path, spec), leaf in zip(flat_s, flat_l):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % n == 0, (
+                f"{where}: {path} dim {dim} size {leaf.shape[dim]} "
+                f"not divisible by {n}"
+            )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", MESHES, ids=["1pod", "2pod"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    shapes = init_params_shape(cfg)
+    specs = param_specs(cfg, shapes, mesh)
+    _check_divisible(specs, shapes, mesh, f"{arch} params")
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "mamba2-2.7b", "recurrentgemma-2b",
+                                  "deepseek-v2-236b", "whisper-tiny"])
+@pytest.mark.parametrize("mesh", MESHES, ids=["1pod", "2pod"])
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, mesh, shape):
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        pytest.skip("shape inapplicable")
+    spec = SHAPES[shape]
+    caches = jax.eval_shape(
+        lambda: model_caches(cfg, spec.global_batch, spec.seq_len,
+                             enc_len=spec.seq_len)
+    )
+    specs = cache_specs(cfg, caches, mesh, spec.global_batch)
+    _check_divisible(specs, caches, mesh, f"{arch} caches {shape}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_all_shapes(arch):
+    cfg = get_config(arch)
+    for mesh in MESHES:
+        for name, spec in SHAPES.items():
+            if not shape_applicable(cfg, name):
+                continue
+            out = batch_specs(cfg, mesh, spec.global_batch, kind=spec.kind)
+            assert "tokens" in out or "token" in out
+            # batch=1 (long_500k) must not be sharded
+            if spec.global_batch == 1:
+                for s in out.values():
+                    assert len(s) == 0 or s[0] is None
+
+
+def test_param_count_sanity():
+    """Full configs land near their advertised sizes."""
+    expected = {
+        "qwen1.5-0.5b": (0.4e9, 0.8e9),
+        "llama3.2-1b": (1.0e9, 1.5e9),
+        "phi3-mini-3.8b": (3.0e9, 4.5e9),
+        "yi-34b": (30e9, 38e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "mixtral-8x22b": (120e9, 150e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "recurrentgemma-2b": (2.2e9, 3.4e9),
+        "internvl2-1b": (0.5e9, 1.2e9),
+        "whisper-tiny": (25e6, 80e6),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x22b")
+    total, active = cfg.param_count(), cfg.active_param_count()
+    assert active < 0.45 * total  # top-2 of 8 experts + attention
+    ds = get_config("deepseek-v2-236b")
+    assert ds.active_param_count() < 0.2 * ds.param_count()

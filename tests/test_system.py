@@ -1,0 +1,81 @@
+"""End-to-end system tests: the paper's pipeline feeding the LM stack.
+
+walk generation (GraSorw engine) -> corpus -> LM training (llama-family
+reduced config) with checkpointing; plus PPR-query agreement between the
+out-of-core engine and the in-memory oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.core import (
+    BiBlockEngine,
+    InMemoryWalker,
+    partition_into_n_blocks,
+    prnv_task,
+    rwnv_task,
+)
+from repro.data import WalkCorpus
+from repro.models import model_init
+from repro.optim import OptConfig, adamw_init
+from repro.train import make_train_step
+
+
+def test_walks_to_lm_training():
+    from repro.core import erdos_renyi
+
+    g = erdos_renyi(400, 3200, seed=9)  # vocab must fit the reduced config
+    bg = partition_into_n_blocks(g, 4)
+    task = rwnv_task(walks_per_vertex=2, length=20, seed=0)
+    res = BiBlockEngine(bg, task, record_walks=True).run()
+    corpus = WalkCorpus.from_walks(res.corpus, g.num_vertices)
+
+    cfg = reduced_config("llama3.2-1b")
+    assert corpus.vocab_size <= cfg.vocab_size
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=3e-3, warmup_steps=2,
+                                                  total_steps=40)))
+    losses = []
+    for i, batch in enumerate(corpus.batches(8, 24, epochs=None, seed=0)):
+        batch.pop("cursor"), batch.pop("epoch")
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if i >= 14:
+            break
+    assert np.isfinite(losses).all()
+    assert min(losses[-3:]) < losses[0], f"no learning: {losses}"
+
+
+def test_ppr_engine_agrees_with_oracle(small_blocked):
+    """PRNV endpoint distribution: out-of-core engine vs in-memory oracle."""
+    g = small_blocked.graph
+    task = prnv_task(11, g.num_vertices, samples_per_vertex=16, seed=5)
+    r_engine = BiBlockEngine(small_blocked, task).run()
+    r_oracle = InMemoryWalker(small_blocked, task).run(record_walks=False)
+    p1 = r_engine.ppr_estimate()
+    p2 = r_oracle.ppr_estimate()
+    # two Monte-Carlo estimates with different rng: TV ~ O(sqrt(K/n))
+    tv = 0.5 * np.abs(p1 - p2).sum()
+    assert tv < 0.2, f"total variation {tv:.3f} too high"
+    top1 = set(np.argsort(-p1)[:20])
+    top2 = set(np.argsort(-p2)[:20])
+    assert len(top1 & top2) >= 10
+
+
+def test_walk_corpus_full_coverage(small_blocked):
+    """RWNV starts 10 walks/vertex (paper setting scaled): every vertex is a
+    source and every recorded step is a real edge."""
+    g = small_blocked.graph
+    task = rwnv_task(walks_per_vertex=1, length=6, seed=2)
+    res = BiBlockEngine(small_blocked, task, record_walks=True).run()
+    srcs = res.corpus[:, 0]
+    np.testing.assert_array_equal(np.sort(srcs), np.arange(g.num_vertices))
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, len(res.corpus), 60):
+        row = res.corpus[i]
+        row = row[row >= 0]
+        for t in range(len(row) - 1):
+            assert row[t + 1] in g.neighbors(row[t]), "non-edge step recorded"

@@ -1,0 +1,46 @@
+"""128-bit walk record pack/unpack (paper §6.1)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import WalkBatch, pack_walks, unpack_walks
+
+
+@given(
+    n=st.integers(1, 200),
+    nblocks=st.integers(1, 30),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrip(n, nblocks, seed):
+    rng = np.random.default_rng(seed)
+    starts = np.concatenate(
+        [[0], np.sort(rng.integers(1, 1 << 20, nblocks - 1)), [1 << 20]]
+    ) if nblocks > 1 else np.array([0, 1 << 20])
+    starts = np.unique(starts)
+    V = int(starts[-1])
+    batch = WalkBatch(
+        src=rng.integers(0, V, n),
+        prev=rng.integers(0, V, n),
+        cur=rng.integers(0, V, n),
+        hop=rng.integers(0, 1024, n).astype(np.int32),
+    )
+    packed = pack_walks(batch, starts)
+    assert packed.shape == (n, 4)
+    assert packed.dtype == np.uint32  # 128 bits per walk
+    out = unpack_walks(packed, starts)
+    np.testing.assert_array_equal(out.src, batch.src)
+    np.testing.assert_array_equal(out.prev, batch.prev)
+    np.testing.assert_array_equal(out.cur, batch.cur)
+    np.testing.assert_array_equal(out.hop, batch.hop)
+
+
+def test_pack_overflow_detection():
+    starts = np.array([0, 10])
+    batch = WalkBatch(np.array([1 << 40]), np.array([0]), np.array([0]),
+                      np.array([0]))
+    try:
+        pack_walks(batch, starts)
+        assert False, "expected OverflowError"
+    except OverflowError:
+        pass
