@@ -16,12 +16,21 @@ One function per paper table/figure:
 Every entry prints ``name,us_per_call,derived`` CSV rows (us_per_call =
 simulated wall time per sampled step in microseconds; derived = the
 headline ratio the paper reports for that table).
+
+The walk-pool backend is an axis: ``--pool {memory,disk}`` (or
+``BENCH_POOL=disk``) runs every engine against the chosen
+:mod:`repro.io` WalkPool backend; ``pool_prefetch_hits`` rows report the
+BlockStore prefetch overlap.
 """
 
 from __future__ import annotations
 
 import os
+import sys
+from pathlib import Path
 from typing import Callable, Dict
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
@@ -49,6 +58,20 @@ N_BLOCKS = 6
 WALKS_PV = 2
 LENGTH = 16
 
+#: walk-pool axis — every engine run goes through this backend.  The flush
+#: threshold applies to BOTH backends so memory-vs-disk rows differ only in
+#: where the spilled bytes go, never in what is charged.
+POOL_KW: Dict[str, object] = {
+    "pool": os.environ.get("BENCH_POOL", "memory"),
+    "pool_flush_walks": int(os.environ.get("BENCH_FLUSH", "4096")),
+}
+
+
+def set_pool_backend(pool: str, flush_walks: int | None = None) -> None:
+    POOL_KW.clear()
+    POOL_KW["pool"] = pool
+    POOL_KW["pool_flush_walks"] = flush_walks or 4096
+
 
 def _row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.3f},{derived}"
@@ -70,7 +93,7 @@ def fig1_profile() -> list[str]:
         ("deepwalk", deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
         ("node2vec", rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
     ):
-        res = SOGWEngine(bg, task).run()
+        res = SOGWEngine(bg, task, **POOL_KW).run()
         s = res.stats
         total = max(s.sim_wall_time, 1e-12)
         rows.append(_row(
@@ -89,8 +112,8 @@ def table3_engines() -> list[str]:
         ("rwnv", rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
         ("prnv", prnv_task(3, g.num_vertices, samples_per_vertex=1)),
     ):
-        r_pb = PlainBucketEngine(bg, task).run()
-        r_bb = BiBlockEngine(bg, task).run()
+        r_pb = PlainBucketEngine(bg, task, **POOL_KW).run()
+        r_bb = BiBlockEngine(bg, task, **POOL_KW).run()
         rows.append(_row(
             f"table3_{tname}_biblock_vs_pb", _us_per_step(r_bb),
             f"wall_ratio={r_bb.stats.sim_wall_time/r_pb.stats.sim_wall_time:.3f};"
@@ -107,8 +130,8 @@ def table4_loading() -> list[str]:
     parts["metis_like"] = loc
     task = rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     for pname, bg in parts.items():
-        r_full = BiBlockEngine(bg, task, loading="full").run()
-        r_auto = BiBlockEngine(bg, task, loading="auto").run()
+        r_full = BiBlockEngine(bg, task, loading="full", **POOL_KW).run()
+        r_auto = BiBlockEngine(bg, task, loading="auto", **POOL_KW).run()
         rows.append(_row(
             f"table4_{pname}_learning_vs_full", _us_per_step(r_auto),
             f"wall_ratio={r_auto.stats.sim_wall_time/r_full.stats.sim_wall_time:.3f};"
@@ -131,9 +154,9 @@ def table6_distributions() -> list[str]:
     for gname, g in graphs.items():
         bg = partition_into_n_blocks(g, N_BLOCKS)
         task = rwnv_task(walks_per_vertex=WALKS_PV, length=task_len)
-        r_so = SOGWEngine(bg, task).run()
-        r_sg = SOGWEngine(bg, task, static_cache=True).run()
-        r_bb = BiBlockEngine(bg, task).run()
+        r_so = SOGWEngine(bg, task, **POOL_KW).run()
+        r_sg = SOGWEngine(bg, task, static_cache=True, **POOL_KW).run()
+        r_bb = BiBlockEngine(bg, task, **POOL_KW).run()
         rows.append(_row(
             f"table6_{gname}", _us_per_step(r_bb),
             f"speedup_vs_sogw={r_so.stats.sim_wall_time/max(r_bb.stats.sim_wall_time,1e-12):.2f};"
@@ -148,9 +171,9 @@ def table7_first_order() -> list[str]:
     task = deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     # GraphWalker baseline = SOGW machinery on a 1st-order model (no
     # previous-vertex I/O is charged because the model never needs it)
-    r_gw = SOGWEngine(bg, task).run()
-    r_nl = BiBlockEngine(bg, task, loading="full").run()
-    r_gr = BiBlockEngine(bg, task, loading="auto").run()
+    r_gw = SOGWEngine(bg, task, **POOL_KW).run()
+    r_nl = BiBlockEngine(bg, task, loading="full", **POOL_KW).run()
+    r_gr = BiBlockEngine(bg, task, loading="auto", **POOL_KW).run()
 
     def _ratios(r):
         return (
@@ -174,7 +197,7 @@ def table8_scheduling() -> list[str]:
     rows = []
     task = deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     for strat in ("alphabet", "iteration", "min_height", "max_sum", "graphwalker"):
-        eng = SOGWEngine(bg, task)
+        eng = SOGWEngine(bg, task, **POOL_KW)
         eng.scheduler = make_scheduler(strat, bg.num_blocks, 0)
         res = eng.run()
         rows.append(_row(
@@ -193,14 +216,49 @@ def fig8_end_to_end() -> list[str]:
         ("rwnv", rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
         ("prnv", prnv_task(5, g.num_vertices, samples_per_vertex=1)),
     ):
-        r_so = SOGWEngine(bg, task).run()
-        r_sg = SOGWEngine(bg, task, static_cache=True).run()
-        r_bb = BiBlockEngine(bg, task).run()
+        r_so = SOGWEngine(bg, task, **POOL_KW).run()
+        r_sg = SOGWEngine(bg, task, static_cache=True, **POOL_KW).run()
+        r_bb = BiBlockEngine(bg, task, **POOL_KW).run()
         rows.append(_row(
             f"fig8_{tname}_grasorw", _us_per_step(r_bb),
             f"speedup_vs_sogw={r_so.stats.sim_wall_time/max(r_bb.stats.sim_wall_time,1e-12):.2f};"
             f"speedup_vs_sgsc={r_sg.stats.sim_wall_time/max(r_bb.stats.sim_wall_time,1e-12):.2f};"
             f"io_reduction={r_so.stats.sim_io_time/max(r_bb.stats.sim_io_time,1e-12):.2f}",
+        ))
+    return rows
+
+
+def pool_backends() -> list[str]:
+    """The storage-layer axis: memory vs disk walk pools, prefetch on/off.
+
+    Both backends run at the SAME flush threshold, so their rows differ
+    only in where spilled bytes go (modelled vs real files) — the charged
+    I/O is identical by construction.  The prefetch benefit is reported as
+    ``mat_stall``: wall time ``BlockStore.get`` stalled the critical path
+    materialising a block (sync materialisation + waiting on an unfinished
+    prefetch).  With prefetch on, materialisation overlaps the jitted
+    advance call and the stall should shrink toward zero.
+    """
+    g = _default_graph()
+    bg = partition_into_n_blocks(g, N_BLOCKS)
+    task = rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)
+    BiBlockEngine(bg, task).run()  # warm the jit cache off the clock
+    rows = []
+    for pool in ("memory", "disk"):
+        kw: Dict[str, object] = {"pool": pool, "pool_flush_walks": 256}
+        res = BiBlockEngine(bg, task, **kw).run()
+        off = BiBlockEngine(bg, task, prefetch=False, **kw).run()
+        c = res.block_store_counters
+        stall_on = c["sync_materialize_time"] + c["prefetch_wait_time"]
+        stall_off = off.block_store_counters["sync_materialize_time"]
+        rows.append(_row(
+            f"pool_{pool}_biblock", _us_per_step(res),
+            f"prefetch_hits={c['prefetch_hits']};"
+            f"prefetch_issued={c['prefetch_issued']};"
+            f"cache_hits={c['cache_hits']};"
+            f"walk_bytes_written={res.stats.walk_bytes_written};"
+            f"mat_stall_ms={1e3*stall_on:.2f};"
+            f"mat_stall_noprefetch_ms={1e3*stall_off:.2f}",
         ))
     return rows
 
@@ -213,4 +271,27 @@ ALL: Dict[str, Callable[[], list[str]]] = {
     "table7_first_order": table7_first_order,
     "table8_scheduling": table8_scheduling,
     "fig8_end_to_end": fig8_end_to_end,
+    "pool_backends": pool_backends,
 }
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", help=f"entries to run (default all): {sorted(ALL)}")
+    ap.add_argument("--pool", choices=("memory", "disk"), default=None,
+                    help="walk-pool backend for every engine run")
+    ap.add_argument("--flush-walks", type=int, default=None,
+                    help="pool spill threshold (disk backend)")
+    args = ap.parse_args(argv)
+    if args.pool:
+        set_pool_backend(args.pool, args.flush_walks)
+    print("name,us_per_call,derived")
+    for name in args.names or list(ALL):
+        for row in ALL[name]():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,11 @@
-"""Benchmark entry point: ``python -m benchmarks.run [names...]``.
+"""Benchmark entry point: ``python -m benchmarks.run [names...] [--pool disk]``.
 
 Prints ``name,us_per_call,derived`` CSV (one row per paper-table entry).
-Env: BENCH_SCALE=0.5 shrinks the graphs for quick runs.
+Env: BENCH_SCALE=0.5 shrinks the graphs for quick runs; BENCH_POOL=disk
+selects the disk walk-pool backend (same as ``--pool disk``).
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -14,7 +16,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 def main() -> None:
     from benchmarks import bench_lm, bench_walks
 
-    wanted = set(sys.argv[1:])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--pool", choices=("memory", "disk"), default=None,
+                    help="walk-pool backend for the walk benchmarks")
+    ap.add_argument("--flush-walks", type=int, default=None)
+    args = ap.parse_args()
+    if args.pool:
+        bench_walks.set_pool_backend(args.pool, args.flush_walks)
+
+    wanted = set(args.names)
     print("name,us_per_call,derived")
     for name, fn in bench_walks.ALL.items():
         if wanted and name not in wanted:

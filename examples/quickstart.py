@@ -34,12 +34,17 @@ def main():
     print(f"\nRWNV: {task.walks_per_vertex} walks/vertex x len {task.length} "
           f"({2 * g.num_vertices * task.length:,} samples)")
 
-    print("\n[GraSorw bi-block engine]")
-    res = BiBlockEngine(bg, task).run()
+    print("\n[GraSorw bi-block engine — disk walk pool + block prefetch]")
+    res = BiBlockEngine(bg, task, pool="disk", pool_flush_walks=512).run()
     s = res.stats
+    c = res.block_store_counters
     print(f"  block I/Os    : {s.block_ios:6d}  ({s.block_bytes/1e6:.1f} MB)")
     print(f"  vertex I/Os   : {s.vertex_ios:6d}")
     print(f"  on-demand I/Os: {s.ondemand_ios:6d}")
+    print(f"  walk spills   : {s.walk_bytes_written/1e6:.2f} MB written "
+          f"(16-byte packed records), {s.walk_bytes_read/1e6:.2f} MB read")
+    print(f"  prefetch      : {c['prefetch_hits']} hits / "
+          f"{c['prefetch_issued']} issued ({c['cache_hits']} LRU hits)")
     print(f"  sim wall time : {s.sim_wall_time:.3f}s "
           f"(I/O {s.sim_io_time:.3f}s + exec {s.exec_time:.3f}s)")
     print(f"  learned eta0  : {res.loader_summary['global_eta0']}")

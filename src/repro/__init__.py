@@ -1,8 +1,10 @@
 """GraSorw-JAX: I/O-efficient second-order random walks (the paper) +
 a multi-pod LM training/serving framework that consumes them.
 
-Subpackages: core (the paper's system), kernels (Pallas TPU), models,
-sharding, optim, train, data, checkpoint, runtime, configs, launch.
+Subpackages: core (graph/buckets/scheduling/loading + stats), io (walk
+pools + block store with prefetch), engines (bi-block system, baselines,
+in-memory oracle), kernels (Pallas TPU), models, sharding, optim, train,
+data, checkpoint, runtime, configs, launch.
 """
 
 __version__ = "0.1.0"

@@ -1,18 +1,19 @@
-"""GraSorw core: I/O-efficient second-order random walks (the paper's system)."""
+"""GraSorw core: I/O-efficient second-order random walks (the paper's system).
+
+Engine classes (:mod:`repro.engines`) and the storage layer (:mod:`repro.io`)
+are re-exported lazily (PEP 562): they import this package's submodules, so
+eager re-imports here would be circular.  ``from repro.core import
+BiBlockEngine`` still works; so do ``import repro.engines`` and ``import
+repro.io`` on a fresh interpreter.
+"""
+
+import importlib
 
 from .buckets import (
     bucket_ids,
     skewed_block_assignment,
     split_into_buckets,
     traditional_block_assignment,
-)
-from .engine import (
-    BiBlockEngine,
-    InMemoryWalker,
-    PlainBucketEngine,
-    SOGWEngine,
-    WalkResult,
-    advance_pair,
 )
 from .generators import (
     barabasi_albert,
@@ -45,8 +46,38 @@ from .transition import (
 )
 from .walk import WALK_BYTES, WalkBatch, pack_walks, unpack_walks
 
+#: lazily re-exported names -> providing module (avoids import cycles)
+_LAZY = {
+    "BiBlockEngine": "repro.engines",
+    "EngineBase": "repro.engines",
+    "InMemoryWalker": "repro.engines",
+    "PlainBucketEngine": "repro.engines",
+    "SOGWEngine": "repro.engines",
+    "WalkResult": "repro.engines",
+    "advance_pair": "repro.engines",
+    "pair_advance_impl": "repro.engines",
+    "BlockStore": "repro.io",
+    "DiskWalkPool": "repro.io",
+    "MemoryWalkPool": "repro.io",
+    "WalkPool": "repro.io",
+    "make_walk_pool": "repro.io",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))
+
+
 __all__ = [
-    "BiBlockEngine", "InMemoryWalker", "PlainBucketEngine", "SOGWEngine",
+    "BiBlockEngine", "EngineBase", "InMemoryWalker", "PlainBucketEngine",
+    "SOGWEngine", "BlockStore", "DiskWalkPool", "MemoryWalkPool", "WalkPool",
+    "make_walk_pool",
     "WalkResult", "advance_pair", "BlockedGraph", "CSRGraph", "ResidentBlock",
     "block_of", "BlockLoadingModel", "LinearCostModel",
     "greedy_locality_partition", "partition_into_n_blocks",

@@ -14,7 +14,7 @@ direct analogue of the paper's per-thread bucket buffers merged lock-free.
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -49,19 +49,31 @@ def bucket_ids(block_starts: np.ndarray, batch: WalkBatch, current_block: int) -
 
 
 def split_into_buckets(
-    block_starts: np.ndarray, batch: WalkBatch, current_block: int
-) -> Dict[int, WalkBatch]:
-    """Group current walks into buckets (stable counting sort by bucket id)."""
+    block_starts: np.ndarray,
+    batch: WalkBatch,
+    current_block: int,
+    wid: Optional[np.ndarray] = None,
+) -> Dict[int, Tuple[WalkBatch, np.ndarray]]:
+    """Group current walks into buckets (stable counting sort by bucket id).
+
+    Returns wid-aligned ``bucket_id -> (WalkBatch, wid)`` pairs so callers
+    never re-sort to realign walk ids.  When ``wid`` is omitted, positional
+    ids ``arange(len(batch))`` are used.
+    """
     if len(batch) == 0:
         return {}
+    if wid is None:
+        wid = np.arange(len(batch), dtype=np.int64)
     ids = bucket_ids(block_starts, batch, current_block)
     order = np.argsort(ids, kind="stable")
     ids_sorted = ids[order]
     batch = batch.select(order)
+    wid_sorted = wid[order]
     # segment boundaries
     uniq, starts = np.unique(ids_sorted, return_index=True)
-    out: Dict[int, WalkBatch] = {}
+    out: Dict[int, Tuple[WalkBatch, np.ndarray]] = {}
     bounds = list(starts) + [len(batch)]
     for k, b_id in enumerate(uniq):
-        out[int(b_id)] = batch.select(slice(bounds[k], bounds[k + 1]))
+        seg = slice(bounds[k], bounds[k + 1])
+        out[int(b_id)] = (batch.select(seg), wid_sorted[seg])
     return out

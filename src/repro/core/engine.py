@@ -1,42 +1,31 @@
-"""Walk execution engines.
+"""Backward-compatibility shim — the engines now live in :mod:`repro.engines`.
 
-* :class:`BiBlockEngine` — the paper's system (GraSorw): triangular bi-block
-  scheduling (§4.2), skewed walk storage + bucket management (§4.3),
-  bucket-extending (Alg. 2), learning-based block loading (§5).
-* :class:`PlainBucketEngine` — the PB baseline of §7.3 (buckets, two block
-  slots, but traditional walk storage, state-aware current scheduling and a
-  0..N_B-1 ancillary sweep).
-* :class:`SOGWEngine` — Second-Order GraphWalker baseline (§7.1): one current
-  block, per-walk random vertex I/O for the previous vertex's adjacency; with
-  ``static_cache`` it becomes SGSC (static top-degree vertex cache).
-* :class:`InMemoryWalker` — whole-graph fast path: the oracle for correctness
-  tests and the corpus generator for LM training on small/medium graphs.
+The former monolith was split across a real storage layer:
 
-The inner step of every engine is the same batched sampler: alias/uniform
-proposal + Node2vec rejection test with binary-search membership
-(:mod:`repro.core.sampling`); the Pallas kernel in
-:mod:`repro.kernels.node2vec_step` is the TPU version of exactly this loop.
+* :mod:`repro.io` — :class:`WalkPool` backends (memory/disk walk pools using
+  the 128-bit packed record) and :class:`BlockStore` (LRU resident-block
+  cache + background prefetch);
+* :mod:`repro.engines` — :class:`BiBlockEngine`, :class:`PlainBucketEngine`,
+  :class:`SOGWEngine`, :class:`InMemoryWalker` atop that layer.
+
+Import from those packages in new code; this module keeps every public (and
+historically semi-public) name importable from ``repro.core.engine``.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import time
-from functools import partial
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from .buckets import split_into_buckets
-from .graph import BlockedGraph, ResidentBlock, block_of
-from .loader import BlockLoadingModel
-from .scheduler import make_scheduler
-from .stats import SSD, DevicePreset, IOStats
-from .transition import Node2vec, WalkTask
-from .walk import WALK_BYTES, WalkBatch
+from repro.engines import (  # noqa: F401
+    BiBlockEngine,
+    EngineBase,
+    InMemoryWalker,
+    PlainBucketEngine,
+    SOGWEngine,
+    WalkResult,
+    _DeviceBlockPair,
+    advance_pair,
+    pair_advance_impl,
+    pow2_pad,
+)
+from repro.engines.base import EngineBase as _EngineBase  # noqa: F401
+from repro.engines.step import pow2_pad as _pow2_pad  # noqa: F401
 
 __all__ = [
     "WalkResult",
@@ -44,799 +33,6 @@ __all__ = [
     "PlainBucketEngine",
     "SOGWEngine",
     "InMemoryWalker",
+    "advance_pair",
+    "pair_advance_impl",
 ]
-
-
-# ===========================================================================
-# The jitted pair-advance step (shared by BiBlock / PB engines)
-# ===========================================================================
-
-def pair_advance_impl(
-    pair_start,      # [2] i32 — global first-vertex of each resident block
-    pair_nverts,     # [2] i32
-    indptr,          # [2, MV+1] i32 (block-local offsets)
-    indices,         # [2, ME]   i32 (global ids, sorted per row)
-    alias_j,         # [2, ME]   i32 (local alias slots; dummy if not has_alias)
-    alias_q,         # [2, ME]   f32
-    prev,            # [N] i32
-    cur,             # [N] i32
-    hop,             # [N] i32
-    alive,           # [N] bool — not yet terminated
-    key,             # PRNG key
-    length,          # () i32 — walk length in edges
-    decay,           # () f32 — per-step continue probability (1.0 = fixed len)
-    p,               # () f32 — node2vec return parameter
-    q,               # () f32 — node2vec in-out parameter
-    *,
-    order: int,
-    k_max: int,
-    n_iters: int,
-    record: bool,
-    has_alias: bool,
-    max_len: int,
-):
-    """Advance every walk until it leaves the resident pair or terminates.
-
-    Vectorised Alg. 2 ``UpdateWalk``: "walks keep moving while they jump
-    between the two blocks in memory".  Returns
-    ``(prev, cur, hop, alive, steps_taken, trace)`` where ``trace[n, h]`` is
-    the vertex walk n reached at hop h during this call (-1 = no move).
-    """
-    N = prev.shape[0]
-    ME = indices.shape[1]
-    flat_indices = indices.reshape(-1)
-    flat_alias_j = alias_j.reshape(-1)
-    flat_alias_q = alias_q.reshape(-1)
-    max_bias = jnp.maximum(1.0, jnp.maximum(1.0 / p, 1.0 / q))
-    # one spare "dump" column (max_len+1) absorbs writes of frozen walks
-    trace0 = jnp.full((N, max_len + 2) if record else (1, 1), -1, dtype=jnp.int32)
-    iota = jnp.arange(N)
-
-    def in_pair(v):
-        return ((v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])) | (
-            (v >= pair_start[1]) & (v < pair_start[1] + pair_nverts[1])
-        )
-
-    def locate(v):
-        in0 = (v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])
-        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
-        row = jnp.clip(v - pair_start[slot], 0, indptr.shape[1] - 2)
-        return slot, row
-
-    def cond(state):
-        _, _, _, _, resident, _, _, _, it = state
-        return jnp.any(resident) & (it <= max_len)
-
-    def body(state):
-        prev_, cur_, hop_, alive_, resident, key_, steps_, trace_, it = state
-        key_, k_prop, k_term = jax.random.split(key_, 3)
-
-        movable = resident  # alive & cur in pair
-        slot, row = locate(cur_)
-        row_start = indptr[slot, row]
-        deg = indptr[slot, row + 1] - row_start
-        dead = movable & (deg <= 0)
-        movable = movable & (deg > 0)
-        deg_c = jnp.maximum(deg, 1)
-
-        if order == 2:
-            uslot, urow = locate(prev_)
-            u_start = indptr[uslot, urow]
-            ulo = uslot * ME + u_start
-            uhi = ulo + (indptr[uslot, urow + 1] - u_start)
-
-        # ---- proposal + rejection over k_max rounds -------------------------
-        def propose(kk, carry):
-            z_, accepted_, key_p = carry
-            key_p, k1 = jax.random.split(key_p)
-            u123 = jax.random.uniform(k1, (3, N))
-            kloc = jnp.minimum((u123[0] * deg_c).astype(jnp.int32), deg_c - 1)
-            idx = slot * ME + row_start + kloc
-            if has_alias:
-                take_alias = u123[1] >= flat_alias_q[idx]
-                kloc = jnp.where(take_alias, flat_alias_j[idx], kloc)
-                idx = slot * ME + row_start + kloc
-            zk = flat_indices[idx]
-            if order == 2:
-                from .sampling import searchsorted_rows
-
-                memb = searchsorted_rows(flat_indices, ulo, uhi, zk, n_iters=n_iters)
-                bias = jnp.where(zk == prev_, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
-                acc_p = bias / max_bias
-                acc_p = jnp.where(hop_ == 0, 1.0, acc_p)  # first step: 1st-order
-            else:
-                acc_p = jnp.ones((N,), jnp.float32)
-            last = kk == k_max - 1
-            take = (~accepted_) & movable & ((u123[2] < acc_p) | last)
-            z_ = jnp.where(take, zk, z_)
-            return z_, accepted_ | take, key_p
-
-        z, _, _ = jax.lax.fori_loop(0, k_max, propose, (cur_, ~movable, k_prop))
-
-        # ---- commit ----------------------------------------------------------
-        new_hop = hop_ + movable.astype(jnp.int32)
-        new_prev = jnp.where(movable, cur_, prev_)
-        new_cur = jnp.where(movable, z, cur_)
-        finished = movable & (new_hop >= length)
-        stopped = movable & (jax.random.uniform(k_term, (N,)) >= decay)
-        new_alive = alive_ & ~dead & ~finished & ~stopped
-        new_resident = new_alive & in_pair(new_cur)
-        if record:
-            cols = jnp.where(movable, jnp.clip(new_hop, 0, max_len), max_len + 1)
-            trace_ = trace_.at[iota, cols].set(new_cur)
-        steps_ = steps_ + movable.astype(jnp.int32).sum()
-        return (new_prev, new_cur, new_hop, new_alive, new_resident, key_,
-                steps_, trace_, it + 1)
-
-    resident0 = alive & in_pair(cur)
-    init = (prev, cur, hop, alive, resident0, key,
-            jnp.zeros((), jnp.int32), trace0, jnp.zeros((), jnp.int32))
-    prev_f, cur_f, hop_f, alive_f, _, _, steps, trace, _ = jax.lax.while_loop(
-        cond, body, init
-    )
-    if record:
-        trace = trace[:, : max_len + 1]
-    return prev_f, cur_f, hop_f, alive_f, steps, trace
-
-
-#: jitted entry point (host engines); the raw impl is reused inside shard_map
-advance_pair = partial(
-    jax.jit,
-    static_argnames=("order", "k_max", "n_iters", "record", "has_alias", "max_len"),
-)(pair_advance_impl)
-
-
-def _pow2_pad(n: int, lo: int = 256) -> int:
-    m = lo
-    while m < n:
-        m <<= 1
-    return m
-
-
-# ===========================================================================
-# Shared engine plumbing
-# ===========================================================================
-
-@dataclasses.dataclass
-class WalkResult:
-    """Task output: endpoint histogram (PPR estimator), optional corpus."""
-
-    num_walks: int
-    steps_sampled: int
-    endpoint_counts: np.ndarray  # [V] visits at termination
-    corpus: Optional[np.ndarray]  # [num_walks, length+1] int32 or None
-    stats: IOStats
-    loader_summary: Optional[dict] = None
-
-    def ppr_estimate(self) -> np.ndarray:
-        tot = max(self.endpoint_counts.sum(), 1)
-        return self.endpoint_counts / tot
-
-
-class _DeviceBlockPair:
-    """Two resident block slots as stacked device arrays ("memory")."""
-
-    def __init__(self, bg: BlockedGraph, has_alias: bool):
-        self.bg = bg
-        self.has_alias = has_alias
-        shape_ip = (2, bg.max_block_verts + 1)
-        shape_ix = (2, bg.max_block_edges)
-        self.start = np.zeros(2, np.int32)
-        self.nverts = np.zeros(2, np.int32)
-        self.indptr = np.zeros(shape_ip, np.int32)
-        self.indices = np.full(shape_ix, -1, np.int32)
-        self.alias_j = np.zeros(shape_ix, np.int32)
-        self.alias_q = np.ones(shape_ix, np.float32)
-
-    def set_slot(self, s: int, blk: ResidentBlock) -> None:
-        self.start[s] = blk.start
-        self.nverts[s] = blk.nverts
-        self.indptr[s] = blk.indptr
-        self.indices[s] = blk.indices
-        if self.has_alias and blk.alias_j is not None:
-            self.alias_j[s] = blk.alias_j
-            self.alias_q[s] = blk.alias_q
-
-    def device_args(self):
-        return (
-            jnp.asarray(self.start),
-            jnp.asarray(self.nverts),
-            jnp.asarray(self.indptr),
-            jnp.asarray(self.indices),
-            jnp.asarray(self.alias_j),
-            jnp.asarray(self.alias_q),
-        )
-
-
-class _EngineBase:
-    """Common state: walk pools ("disk"), stats, task bookkeeping."""
-
-    def __init__(
-        self,
-        bg: BlockedGraph,
-        task: WalkTask,
-        *,
-        preset: DevicePreset = SSD,
-        record_walks: bool = False,
-        k_max: int = 16,
-        pool_flush_walks: int = 1 << 18,
-        seed: Optional[int] = None,
-    ):
-        self.bg = bg
-        self.task = task
-        self.stats = IOStats(preset)
-        self.record_walks = record_walks
-        self.k_max = k_max if isinstance(task.model, Node2vec) else 1
-        if isinstance(task.model, Node2vec) and task.model.p == task.model.q == 1.0:
-            self.k_max = 1  # acceptance prob is exactly 1 — no rejection needed
-        self.pool_flush_walks = pool_flush_walks
-        self.seed = task.seed if seed is None else seed
-        self.order = task.model.order
-        self.has_alias = bg.graph.weights is not None
-        if self.has_alias:
-            bg._build_alias = True
-        self.n_iters = int(np.ceil(np.log2(max(bg.max_block_edges, 2)))) + 2
-        self._key = jax.random.PRNGKey(self.seed)
-        V = bg.graph.num_vertices
-        self.endpoint_counts = np.zeros(V, np.int64)
-        src = task.initial_walks(V)
-        self.num_walks = src.shape[0]
-        self.corpus = (
-            np.full((self.num_walks, task.length + 1), -1, np.int32)
-            if record_walks
-            else None
-        )
-        if record_walks:
-            self.corpus[:, 0] = src
-        # pools: block -> list of (WalkBatch, wid array). "disk" tier.
-        self.pools: Dict[int, List[Tuple[WalkBatch, np.ndarray]]] = {
-            b: [] for b in range(bg.num_blocks)
-        }
-        self.pool_counts = np.zeros(bg.num_blocks, np.int64)
-        self.pool_min_hop = np.full(bg.num_blocks, np.inf)
-        self._pending_init_src = src
-        self.unfinished = self.num_walks
-        self.pair = _DeviceBlockPair(bg, self.has_alias)
-
-    # -- pool plumbing ("disk" walk I/O) --------------------------------------
-    def _push_pool(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
-        if len(batch) == 0:
-            return
-        self.pools[b].append((batch, wid))
-        self.pool_counts[b] += len(batch)
-        if len(batch):
-            self.pool_min_hop[b] = min(self.pool_min_hop[b], float(batch.hop.min()))
-        self.stats.walk_io(len(batch))  # flush to the walk pool on disk
-
-    def _load_pool(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
-        entries = self.pools[b]
-        self.pools[b] = []
-        n = int(self.pool_counts[b])
-        self.pool_counts[b] = 0
-        self.pool_min_hop[b] = np.inf
-        if not entries:
-            return WalkBatch.empty(), np.zeros(0, np.int64)
-        batch = WalkBatch.concat([e[0] for e in entries])
-        wid = np.concatenate([e[1] for e in entries])
-        self.stats.walk_io(n)  # load from the walk pool on disk
-        return batch, wid
-
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
-    # -- termination bookkeeping ----------------------------------------------
-    def _retire(self, batch: WalkBatch, wid: np.ndarray, alive: np.ndarray) -> Tuple[WalkBatch, np.ndarray]:
-        done = ~alive
-        if done.any():
-            ends = batch.cur[done]
-            np.add.at(self.endpoint_counts, ends, 1)
-            self.unfinished -= int(done.sum())
-        keep = alive
-        return batch.select(keep), wid[keep]
-
-    def _record_trace(self, wid: np.ndarray, trace: np.ndarray) -> None:
-        if self.corpus is None or wid.size == 0:
-            return
-        cols = np.nonzero((trace >= 0).any(axis=0))[0]
-        for h in cols:
-            col = trace[:, h]
-            m = col >= 0
-            self.corpus[wid[m], h] = col[m]
-
-    # -- the jitted advance wrapper --------------------------------------------
-    def _advance(self, batch: WalkBatch, wid: np.ndarray):
-        """Run advance_pair on the resident pair; returns updated host batch."""
-        n = len(batch)
-        N = _pow2_pad(n)
-        pad = N - n
-
-        def pad32(x, fill):
-            return jnp.asarray(
-                np.concatenate([x.astype(np.int32), np.full(pad, fill, np.int32)])
-            )
-
-        prev = pad32(batch.prev, 0)
-        cur = pad32(batch.cur, 0)
-        hop = pad32(batch.hop, 0)
-        alive = jnp.asarray(
-            np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
-        )
-        t0 = time.perf_counter()
-        out = advance_pair(
-            *self.pair.device_args(),
-            prev, cur, hop, alive, self._next_key(),
-            jnp.int32(self.task.length), jnp.float32(self.task.decay),
-            jnp.float32(getattr(self.task.model, "p", 1.0)),
-            jnp.float32(getattr(self.task.model, "q", 1.0)),
-            order=self.order, k_max=self.k_max, n_iters=self.n_iters,
-            record=self.record_walks, has_alias=self.has_alias,
-            max_len=int(self.task.length),
-        )
-        prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
-            np.asarray, jax.block_until_ready(out)
-        )
-        self.stats.exec_time += time.perf_counter() - t0
-        self.stats.steps_sampled += int(steps)
-        if self.record_walks:
-            self._record_trace(wid, trace[:n])
-        new_batch = WalkBatch(batch.src, prev_f[:n], cur_f[:n], hop_f[:n])
-        return new_batch, alive_f[:n]
-
-    # -- initialization stage (paper App. B step 1) -----------------------------
-    def _initialize(self) -> None:
-        """First-order init: advance walks inside their source block until
-        they leave it or terminate, guaranteeing B(u) != B(v) for every
-        persisted walk."""
-        src = self._pending_init_src
-        self._pending_init_src = None
-        wid_all = np.arange(src.shape[0], dtype=np.int64)
-        src_blocks = block_of(self.bg.block_starts, src)
-        for b in np.unique(src_blocks):
-            blk = self.bg.materialize_block(int(b))
-            self.stats.block_load(int(b), blk.nbytes_full(), sequential=True)
-            self.pair.set_slot(0, blk)
-            self.pair.set_slot(1, blk)
-            m = src_blocks == b
-            batch = WalkBatch(src[m], src[m], src[m], np.zeros(m.sum(), np.int32))
-            wid = wid_all[m]
-            batch, alive = self._advance(batch, wid)
-            batch, wid = self._retire(batch, wid, alive)
-            self._persist(batch, wid)
-
-    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
-        raise NotImplementedError
-
-    def result(self) -> WalkResult:
-        return WalkResult(
-            num_walks=self.num_walks,
-            steps_sampled=self.stats.steps_sampled,
-            endpoint_counts=self.endpoint_counts,
-            corpus=self.corpus,
-            stats=self.stats,
-        )
-
-
-# ===========================================================================
-# GraSorw: the bi-block engine
-# ===========================================================================
-
-class BiBlockEngine(_EngineBase):
-    """Triangular bi-block scheduling + skewed storage + buckets + LBL."""
-
-    def __init__(
-        self,
-        bg: BlockedGraph,
-        task: WalkTask,
-        *,
-        loading: str = "auto",
-        bucket_extending: bool = True,
-        preset: DevicePreset = SSD,
-        record_walks: bool = False,
-        **kw,
-    ):
-        super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
-        self.loader = BlockLoadingModel(bg.num_blocks, mode=loading)
-        self.bucket_extending = bucket_extending
-
-    # skewed storage: persist with min(B(u), B(v)); first-order models never
-    # read prev, so they use the traditional B(cur) association (§7.8)
-    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
-        if len(batch) == 0:
-            return
-        if self.order == 1:
-            assoc = block_of(self.bg.block_starts, batch.cur)
-        else:
-            assoc = np.minimum(
-                block_of(self.bg.block_starts, batch.prev),
-                block_of(self.bg.block_starts, batch.cur),
-            )
-        for b in np.unique(assoc):
-            m = assoc == b
-            self._push_pool(int(b), batch.select(m), wid[m])
-
-    #: modelled in-memory cost per sampled step (feeds the LR exec component)
-    STEP_COST = 2.0e-8
-
-    def _load_ancillary(self, i: int, n_bucket_walks: int, activated: np.ndarray):
-        """Load block i with the learned method; meter; return (decision,
-        eta, load_cost) — execution cost is added before feeding the model
-        (the paper's t_f / t_o cover loading *and* executing, §5.2.1)."""
-        blk = self.bg.materialize_block(i)
-        nv = int(self.bg.block_nverts[i])
-        decision = self.loader.choose(i, n_bucket_walks, nv)
-        eta = n_bucket_walks / max(nv, 1)
-        if decision == "full":
-            nbytes = blk.nbytes_full()
-            cost = self.stats.preset.seq_cost(nbytes)
-            self.stats.block_load(i, nbytes, sequential=True)
-        else:
-            nbytes = self.bg.activated_load_bytes(activated)
-            n_act = np.unique(activated).size
-            cost = self.stats.preset.rand_cost(n_act, nbytes)
-            self.stats.ondemand_load(n_act, nbytes)
-        self.pair.set_slot(1, blk)
-        return decision, eta, cost
-
-    def _meter_extension(self, i: int, batch_before: WalkBatch, batch_after: WalkBatch) -> float:
-        """On-demand loads gather extension vertices reached mid-advance.
-        Returns the modelled cost of those gathers."""
-        s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-        touched = batch_after.cur[(batch_after.cur >= s) & (batch_after.cur < e)]
-        pre = np.unique(
-            np.concatenate(
-                [
-                    batch_before.cur[(batch_before.cur >= s) & (batch_before.cur < e)],
-                    batch_before.prev[(batch_before.prev >= s) & (batch_before.prev < e)],
-                ]
-            )
-        )
-        ext = np.setdiff1d(np.unique(touched), pre, assume_unique=False)
-        if ext.size:
-            nbytes = self.bg.activated_load_bytes(ext)
-            self.stats.ondemand_load(ext.size, nbytes)
-            return self.stats.preset.rand_cost(ext.size, nbytes)
-        return 0.0
-
-    def run(self) -> WalkResult:
-        if self.order == 1:
-            return self._run_first_order()
-        self._initialize()
-        NB = self.bg.num_blocks
-        guard = 0
-        while self.unfinished > 0:
-            guard += 1
-            if guard > self.task.length * NB + 10:
-                raise RuntimeError("engine failed to converge (bug)")
-            self.stats.supersteps += 1
-            for b in range(NB - 1):
-                if self.pool_counts[b] == 0:
-                    continue
-                batch, wid = self._load_pool(b)
-                self.stats.time_slots += 1
-                blk_b = self.bg.materialize_block(b)
-                self.stats.block_load(b, blk_b.nbytes_full(), sequential=True)
-                self.pair.set_slot(0, blk_b)
-                buckets = split_into_buckets(self.bg.block_starts, batch, b)
-                wid_buckets: Dict[int, np.ndarray] = {}
-                # rebuild wid alignment: split_into_buckets sorted the batch,
-                # so recompute per-bucket ids the same way
-                from .buckets import bucket_ids as _bids
-
-                ids = _bids(self.bg.block_starts, batch, b)
-                order = np.argsort(ids, kind="stable")
-                ids_sorted = ids[order]
-                wid_sorted = wid[order]
-                uniq, starts = np.unique(ids_sorted, return_index=True)
-                bounds = list(starts) + [len(batch)]
-                for k, bid in enumerate(uniq):
-                    wid_buckets[int(bid)] = wid_sorted[bounds[k] : bounds[k + 1]]
-
-                i = b  # ancillary cursor: strictly increasing (triangular)
-                pending = dict(buckets)
-                while True:
-                    remaining = sorted(k for k in pending if k > i)
-                    if not remaining:
-                        break
-                    i = remaining[0]
-                    bucket = pending.pop(i)
-                    bwid = wid_buckets.pop(i)
-                    self.stats.bucket_executions += 1
-                    activated = np.concatenate([bucket.prev, bucket.cur])
-                    s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-                    activated = activated[(activated >= s) & (activated < e)]
-                    decision, eta, cost = self._load_ancillary(i, len(bucket), activated)
-                    before = bucket
-                    steps_before = self.stats.steps_sampled
-                    bucket, alive = self._advance(bucket, bwid)
-                    if decision == "ondemand":
-                        cost += self._meter_extension(i, before, bucket)
-                    cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
-                    self.loader.observe(i, eta, cost, decision)
-                    bucket, bwid = self._retire(bucket, bwid, alive)
-                    if len(bucket) == 0:
-                        continue
-                    # Alg. 2 routing
-                    pre_blk = block_of(self.bg.block_starts, bucket.prev)
-                    cur_blk = block_of(self.bg.block_starts, bucket.cur)
-                    extend = (
-                        (cur_blk > i) & (pre_blk == b)
-                        if self.bucket_extending
-                        else np.zeros(len(bucket), bool)
-                    )
-                    # persist the non-extending walks with min-rule
-                    self._persist(bucket.select(~extend), bwid[~extend])
-                    if extend.any():
-                        ext_batch = bucket.select(extend)
-                        ext_wid = bwid[extend]
-                        for nb in np.unique(cur_blk[extend]):
-                            m = cur_blk[extend] == nb
-                            nb = int(nb)
-                            if nb in pending:
-                                pending[nb] = WalkBatch.concat(
-                                    [pending[nb], ext_batch.select(m)]
-                                )
-                                wid_buckets[nb] = np.concatenate(
-                                    [wid_buckets[nb], ext_wid[m]]
-                                )
-                            else:
-                                pending[nb] = ext_batch.select(m)
-                                wid_buckets[nb] = ext_wid[m]
-        res = self.result()
-        res.loader_summary = self.loader.summary()
-        return res
-
-    def _run_first_order(self) -> WalkResult:
-        """§7.8: first-order walks need only the current block; iteration
-        scheduling + the learning-based loader on the current block itself
-        ("heavy block loads become light vertex I/Os once few walks remain")."""
-        self._initialize()
-        NB = self.bg.num_blocks
-        guard = 0
-        while self.unfinished > 0:
-            guard += 1
-            if guard > self.task.length * NB + 10:
-                raise RuntimeError("engine failed to converge (bug)")
-            self.stats.supersteps += 1
-            for b in range(NB):
-                if self.pool_counts[b] == 0:
-                    continue
-                batch, wid = self._load_pool(b)
-                self.stats.time_slots += 1
-                self.stats.bucket_executions += 1
-                activated = batch.cur
-                decision, eta, cost = self._load_ancillary(b, len(batch), activated)
-                self.pair.set_slot(0, self.bg.materialize_block(b))
-                before = batch
-                steps_before = self.stats.steps_sampled
-                batch, alive = self._advance(batch, wid)
-                if decision == "ondemand":
-                    cost += self._meter_extension(b, before, batch)
-                cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
-                self.loader.observe(b, eta, cost, decision)
-                batch, wid = self._retire(batch, wid, alive)
-                self._persist(batch, wid)
-        res = self.result()
-        res.loader_summary = self.loader.summary()
-        return res
-
-
-# ===========================================================================
-# PB baseline: buckets without triangular scheduling / skewed storage
-# ===========================================================================
-
-class PlainBucketEngine(_EngineBase):
-    """§7.3 baseline: traditional walk storage (B(cur)), state-aware current
-    scheduling (GraphWalker's max-sum), ancillary sweep b0..b_{N_B-1}."""
-
-    def __init__(self, bg: BlockedGraph, task: WalkTask, *, preset: DevicePreset = SSD,
-                 record_walks: bool = False, **kw):
-        super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
-        self.scheduler = make_scheduler("max_sum", bg.num_blocks, self.seed)
-
-    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
-        if len(batch) == 0:
-            return
-        assoc = block_of(self.bg.block_starts, batch.cur)
-        for b in np.unique(assoc):
-            m = assoc == b
-            self._push_pool(int(b), batch.select(m), wid[m])
-
-    def run(self) -> WalkResult:
-        self._initialize()
-        guard = 0
-        while self.unfinished > 0:
-            guard += 1
-            if guard > self.task.length * self.bg.num_blocks * 4 + 10:
-                raise RuntimeError("engine failed to converge (bug)")
-            b = self.scheduler.next_block(self.pool_counts, self.pool_min_hop)
-            if b is None:
-                break
-            batch, wid = self._load_pool(b)
-            if len(batch) == 0:
-                continue
-            self.stats.time_slots += 1
-            self.stats.supersteps += 1
-            blk_b = self.bg.materialize_block(b)
-            # state-aware scheduling jumps around: current block load is a
-            # random block I/O (the paper's point about sequential wins)
-            self.stats.block_load(b, blk_b.nbytes_full(), sequential=False)
-            self.pair.set_slot(0, blk_b)
-            # walks live with B(cur); bucket key = B(prev) (plain bucketing)
-            pre_blk = block_of(self.bg.block_starts, batch.prev)
-            for i in range(self.bg.num_blocks):
-                m = pre_blk == i
-                if not m.any():
-                    continue
-                bucket, bwid = batch.select(m), wid[m]
-                self.stats.bucket_executions += 1
-                blk_i = self.bg.materialize_block(i)
-                seq = i == b + 1  # only the successor read is sequential
-                self.stats.block_load(i, blk_i.nbytes_full(), sequential=seq)
-                self.pair.set_slot(1, blk_i)
-                bucket, alive = self._advance(bucket, bwid)
-                bucket, bwid = self._retire(bucket, bwid, alive)
-                self._persist(bucket, bwid)
-        return self.result()
-
-
-# ===========================================================================
-# SOGW / SGSC baselines (host-side; per-walk vertex I/O accounting)
-# ===========================================================================
-
-class SOGWEngine(_EngineBase):
-    """Second-order GraphWalker: one current block; every walk whose stored
-    previous vertex lies outside it pays a random vertex I/O (the paper's
-    Fig. 1a bottleneck).  ``static_cache=True`` adds SGSC's top-degree cache
-    sized to one block's edge budget."""
-
-    def __init__(
-        self,
-        bg: BlockedGraph,
-        task: WalkTask,
-        *,
-        static_cache: bool = False,
-        preset: DevicePreset = SSD,
-        record_walks: bool = False,
-        **kw,
-    ):
-        super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
-        self.scheduler = make_scheduler("max_sum", bg.num_blocks, self.seed)
-        self.cached = np.zeros(bg.graph.num_vertices, bool)
-        if static_cache:
-            deg = bg.graph.degrees.astype(np.int64)
-            order = np.argsort(-deg)
-            budget = int(bg.block_nedges.max())
-            csum = np.cumsum(deg[order])
-            k = int(np.searchsorted(csum, budget, side="right"))
-            top = order[: max(k, 1)]
-            self.cached[top] = True
-            # cache initialisation is I/O (the paper charges it to I/O time)
-            self.stats.vertex_load(top.size, int(8 * top.size + 4 * deg[top].sum()))
-
-    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
-        if len(batch) == 0:
-            return
-        assoc = block_of(self.bg.block_starts, batch.cur)
-        for b in np.unique(assoc):
-            m = assoc == b
-            self._push_pool(int(b), batch.select(m), wid[m])
-
-    def run(self) -> WalkResult:
-        self._initialize()
-        guard = 0
-        while self.unfinished > 0:
-            guard += 1
-            if guard > self.task.length * self.bg.num_blocks * 4 + 10:
-                raise RuntimeError("engine failed to converge (bug)")
-            b = self.scheduler.next_block(self.pool_counts, self.pool_min_hop)
-            if b is None:
-                break
-            batch, wid = self._load_pool(b)
-            if len(batch) == 0:
-                continue
-            self.stats.time_slots += 1
-            self.stats.supersteps += 1
-            blk_b = self.bg.materialize_block(b)
-            self.stats.block_load(b, blk_b.nbytes_full(), sequential=False)
-            # vertex I/Os: SECOND-order walks must fetch the stored previous
-            # vertex's adjacency when it lies outside the current block
-            # (first-order models never touch prev — paper Fig. 1a)
-            pre_blk = block_of(self.bg.block_starts, batch.prev)
-            needs_io = (
-                (pre_blk != b) & (batch.hop > 0) & ~self.cached[batch.prev]
-                if self.order == 2
-                else np.zeros(len(batch), bool)
-            )
-            if needs_io.any():
-                vs = batch.prev[needs_io]
-                deg = self.bg.graph.degrees[vs].astype(np.int64)
-                # per-walk light I/O — SOGW does not dedupe across walks
-                self.stats.vertex_load(int(needs_io.sum()), int(8 * needs_io.sum() + 4 * deg.sum()))
-            # advance within the single block: resident pair = (b, b)
-            self.pair.set_slot(0, blk_b)
-            self.pair.set_slot(1, blk_b)
-            batch, alive = self._advance(batch, wid)
-            batch, wid = self._retire(batch, wid, alive)
-            self._persist(batch, wid)
-        return self.result()
-
-
-# ===========================================================================
-# In-memory oracle / corpus generator
-# ===========================================================================
-
-class InMemoryWalker:
-    """Whole-graph walker: one jit'd while_loop over steps.  Ground truth for
-    engine tests and the corpus generator feeding the LM data pipeline."""
-
-    def __init__(self, bg: BlockedGraph, task: WalkTask, *, k_max: int = 16):
-        self.bg = bg
-        self.task = task
-        self.k_max = 1 if (isinstance(task.model, Node2vec)
-                           and task.model.p == task.model.q == 1.0) else k_max
-        if task.model.order == 1:
-            self.k_max = 1
-
-    def run(self, *, record_walks: bool = True) -> WalkResult:
-        bg, task = self.bg, self.task
-        g = bg.graph
-        stats = IOStats()
-        src = task.initial_walks(g.num_vertices)
-        n = src.shape[0]
-        # whole graph as a single resident "pair" (slot 1 unused)
-        indptr = np.zeros((2, g.num_vertices + 1), np.int32)
-        indptr[0] = g.indptr.astype(np.int32)
-        indptr[1] = 0
-        indices = np.full((2, max(g.num_edges, 1)), -1, np.int32)
-        indices[0, : g.num_edges] = g.indices
-        pair_start = np.array([0, g.num_vertices], np.int32)
-        pair_nverts = np.array([g.num_vertices, 0], np.int32)
-        has_alias = g.weights is not None
-        if has_alias:
-            from .sampling import build_alias_rows
-
-            aj, aq = build_alias_rows(
-                indptr[0], g.num_vertices, max(g.num_edges, 1), g.weights
-            )
-            alias_j = np.stack([aj, aj])
-            alias_q = np.stack([aq, aq])
-        else:
-            alias_j = np.zeros_like(indices)
-            alias_q = np.ones(indices.shape, np.float32)
-
-        N = _pow2_pad(n)
-        pad = N - n
-        pad32 = lambda x: jnp.asarray(
-            np.concatenate([x.astype(np.int32), np.zeros(pad, np.int32)])
-        )
-        alive = jnp.asarray(np.concatenate([np.ones(n, bool), np.zeros(pad, bool)]))
-        t0 = time.perf_counter()
-        out = advance_pair(
-            jnp.asarray(pair_start), jnp.asarray(pair_nverts),
-            jnp.asarray(indptr), jnp.asarray(indices),
-            jnp.asarray(alias_j), jnp.asarray(alias_q),
-            pad32(src), pad32(src), pad32(np.zeros(n)), alive,
-            jax.random.PRNGKey(task.seed),
-            jnp.int32(task.length), jnp.float32(task.decay),
-            jnp.float32(getattr(task.model, "p", 1.0)),
-            jnp.float32(getattr(task.model, "q", 1.0)),
-            order=task.model.order, k_max=self.k_max,
-            n_iters=int(np.ceil(np.log2(max(g.num_edges, 2)))) + 2,
-            record=record_walks, has_alias=has_alias, max_len=int(task.length),
-        )
-        prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
-            np.asarray, jax.block_until_ready(out)
-        )
-        stats.exec_time = time.perf_counter() - t0
-        stats.steps_sampled = int(steps)
-        counts = np.bincount(cur_f[:n], minlength=g.num_vertices).astype(np.int64)
-        corpus = None
-        if record_walks:
-            corpus = np.full((n, task.length + 1), -1, np.int32)
-            corpus[:, 0] = src
-            t = trace[:n]
-            for h in range(1, task.length + 1):
-                m = t[:, h] >= 0
-                corpus[m, h] = t[m, h]
-        return WalkResult(n, int(steps), counts, corpus, stats)

@@ -54,6 +54,8 @@ class IOStats:
         self.vertex_bytes = 0
         self.walk_ios = 0
         self.walk_bytes = 0
+        self.walk_bytes_written = 0
+        self.walk_bytes_read = 0
         self.ondemand_ios = 0
         self.ondemand_bytes = 0
         self.time_slots = 0
@@ -88,11 +90,22 @@ class IOStats:
         self.ondemand_bytes += nbytes
         self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
 
-    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16) -> None:
-        """Walk pool flush/load: 128-bit encoded walks (paper §6.1)."""
+    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16,
+                kind: str = "write") -> None:
+        """Walk pool flush/load: 128-bit encoded walks (paper §6.1).
+
+        ``kind`` distinguishes spills (``"write"``) from pool loads
+        (``"read"``) so ``walk_bytes_written`` can be checked against the
+        bytes a :class:`repro.io.DiskWalkPool` actually put on disk.
+        """
+        nbytes = n_walks * bytes_per_walk
         self.walk_ios += 1
-        self.walk_bytes += n_walks * bytes_per_walk
-        self.sim_walk_io_time += self.preset.seq_cost(n_walks * bytes_per_walk)
+        self.walk_bytes += nbytes
+        if kind == "write":
+            self.walk_bytes_written += nbytes
+        else:
+            self.walk_bytes_read += nbytes
+        self.sim_walk_io_time += self.preset.seq_cost(nbytes)
 
     # -- summaries -------------------------------------------------------------
     @property
@@ -118,6 +131,8 @@ class IOStats:
             "ondemand_bytes": self.ondemand_bytes,
             "walk_ios": self.walk_ios,
             "walk_bytes": self.walk_bytes,
+            "walk_bytes_written": self.walk_bytes_written,
+            "walk_bytes_read": self.walk_bytes_read,
             "time_slots": self.time_slots,
             "supersteps": self.supersteps,
             "steps_sampled": self.steps_sampled,

@@ -1,0 +1,33 @@
+"""Walk execution engines atop the :mod:`repro.io` storage layer.
+
+* :class:`BiBlockEngine` — the paper's system (GraSorw): triangular bi-block
+  scheduling (§4.2), skewed walk storage + bucket management (§4.3),
+  bucket-extending (Alg. 2), learning-based block loading (§5).
+* :class:`PlainBucketEngine` / :class:`SOGWEngine` — the §7 baselines.
+* :class:`InMemoryWalker` — whole-graph fast path: the oracle for correctness
+  tests and the corpus generator for LM training on small/medium graphs.
+
+Every out-of-core engine persists walk state exclusively through an injected
+:class:`repro.io.WalkPool` (``pool="memory"`` or ``"disk"``) and loads graph
+blocks exclusively through a :class:`repro.io.BlockStore` (LRU cache +
+background prefetch).  ``repro.core.engine`` re-exports everything here for
+backward compatibility.
+"""
+
+from .base import EngineBase, WalkResult, _DeviceBlockPair
+from .baselines import PlainBucketEngine, SOGWEngine
+from .biblock import BiBlockEngine
+from .inmemory import InMemoryWalker
+from .step import advance_pair, pair_advance_impl, pow2_pad
+
+__all__ = [
+    "EngineBase",
+    "WalkResult",
+    "BiBlockEngine",
+    "PlainBucketEngine",
+    "SOGWEngine",
+    "InMemoryWalker",
+    "advance_pair",
+    "pair_advance_impl",
+    "pow2_pad",
+]

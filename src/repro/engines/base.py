@@ -1,0 +1,252 @@
+"""Shared engine plumbing: device block pair, walk pools, stats, advance.
+
+Every out-of-core engine owns
+
+* a :class:`repro.io.WalkPool` (``pool=``, ``"memory"`` or ``"disk"``) — the
+  slow tier holding partially-finished walks between time slots; engines
+  persist *exclusively* through it;
+* a :class:`repro.io.BlockStore` — metered, cached, prefetching access to
+  graph blocks; engines load *exclusively* through it;
+* a :class:`_DeviceBlockPair` — the two resident block slots as stacked
+  device arrays (the "memory" tier of the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import BlockedGraph, ResidentBlock, block_of
+from repro.core.stats import SSD, DevicePreset, IOStats
+from repro.core.transition import Node2vec, WalkTask
+from repro.core.walk import WalkBatch
+from repro.io import BlockStore, WalkPool, make_walk_pool
+
+from .step import advance_pair, pow2_pad
+
+__all__ = ["WalkResult", "EngineBase", "_DeviceBlockPair"]
+
+
+@dataclasses.dataclass
+class WalkResult:
+    """Task output: endpoint histogram (PPR estimator), optional corpus."""
+
+    num_walks: int
+    steps_sampled: int
+    endpoint_counts: np.ndarray  # [V] visits at termination
+    corpus: Optional[np.ndarray]  # [num_walks, length+1] int32 or None
+    stats: IOStats
+    loader_summary: Optional[dict] = None
+    block_store_counters: Optional[dict] = None
+
+    def ppr_estimate(self) -> np.ndarray:
+        tot = max(self.endpoint_counts.sum(), 1)
+        return self.endpoint_counts / tot
+
+
+class _DeviceBlockPair:
+    """Two resident block slots as stacked device arrays ("memory")."""
+
+    def __init__(self, bg: BlockedGraph, has_alias: bool):
+        self.bg = bg
+        self.has_alias = has_alias
+        shape_ip = (2, bg.max_block_verts + 1)
+        shape_ix = (2, bg.max_block_edges)
+        self.start = np.zeros(2, np.int32)
+        self.nverts = np.zeros(2, np.int32)
+        self.indptr = np.zeros(shape_ip, np.int32)
+        self.indices = np.full(shape_ix, -1, np.int32)
+        self.alias_j = np.zeros(shape_ix, np.int32)
+        self.alias_q = np.ones(shape_ix, np.float32)
+
+    def set_slot(self, s: int, blk: ResidentBlock) -> None:
+        self.start[s] = blk.start
+        self.nverts[s] = blk.nverts
+        self.indptr[s] = blk.indptr
+        self.indices[s] = blk.indices
+        if self.has_alias and blk.alias_j is not None:
+            self.alias_j[s] = blk.alias_j
+            self.alias_q[s] = blk.alias_q
+
+    def device_args(self):
+        return (
+            jnp.asarray(self.start),
+            jnp.asarray(self.nverts),
+            jnp.asarray(self.indptr),
+            jnp.asarray(self.indices),
+            jnp.asarray(self.alias_j),
+            jnp.asarray(self.alias_q),
+        )
+
+
+class EngineBase:
+    """Common state: walk pool ("disk"), block store, stats, bookkeeping."""
+
+    def __init__(
+        self,
+        bg: BlockedGraph,
+        task: WalkTask,
+        *,
+        preset: DevicePreset = SSD,
+        record_walks: bool = False,
+        k_max: int = 16,
+        pool: Union[str, WalkPool] = "memory",
+        pool_flush_walks: int = 1 << 18,
+        pool_dir: Optional[str] = None,
+        prefetch: bool = True,
+        block_cache_blocks: int = 4,
+        seed: Optional[int] = None,
+    ):
+        self.bg = bg
+        self.task = task
+        self.stats = IOStats(preset)
+        self.record_walks = record_walks
+        self.k_max = k_max if isinstance(task.model, Node2vec) else 1
+        if isinstance(task.model, Node2vec) and task.model.p == task.model.q == 1.0:
+            self.k_max = 1  # acceptance prob is exactly 1 — no rejection needed
+        self.pool_flush_walks = pool_flush_walks
+        self.seed = task.seed if seed is None else seed
+        self.order = task.model.order
+        self.has_alias = bg.graph.weights is not None
+        if self.has_alias:
+            bg._build_alias = True
+        self.n_iters = int(np.ceil(np.log2(max(bg.max_block_edges, 2)))) + 2
+        self._key = jax.random.PRNGKey(self.seed)
+        V = bg.graph.num_vertices
+        self.endpoint_counts = np.zeros(V, np.int64)
+        src = task.initial_walks(V)
+        self.num_walks = src.shape[0]
+        self.corpus = (
+            np.full((self.num_walks, task.length + 1), -1, np.int32)
+            if record_walks
+            else None
+        )
+        if record_walks:
+            self.corpus[:, 0] = src
+        # the storage layer: walk pool ("disk" tier) + block store
+        self.pool: WalkPool = make_walk_pool(
+            pool,
+            num_blocks=bg.num_blocks,
+            stats=self.stats,
+            block_starts=bg.block_starts,
+            flush_walks=pool_flush_walks,
+            directory=pool_dir,
+        )
+        self.blocks = BlockStore(bg, self.stats, enable_prefetch=prefetch,
+                                 capacity=max(block_cache_blocks, 2))
+        self._pending_init_src = src
+        self.unfinished = self.num_walks
+        self.pair = _DeviceBlockPair(bg, self.has_alias)
+
+    # -- pool plumbing ("disk" walk I/O) --------------------------------------
+    @property
+    def pool_counts(self) -> np.ndarray:
+        return self.pool.counts
+
+    @property
+    def pool_min_hop(self) -> np.ndarray:
+        return self.pool.min_hop
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- termination bookkeeping ----------------------------------------------
+    def _retire(self, batch: WalkBatch, wid: np.ndarray, alive: np.ndarray) -> Tuple[WalkBatch, np.ndarray]:
+        done = ~alive
+        if done.any():
+            ends = batch.cur[done]
+            np.add.at(self.endpoint_counts, ends, 1)
+            self.unfinished -= int(done.sum())
+        keep = alive
+        return batch.select(keep), wid[keep]
+
+    def _record_trace(self, wid: np.ndarray, trace: np.ndarray) -> None:
+        if self.corpus is None or wid.size == 0:
+            return
+        cols = np.nonzero((trace >= 0).any(axis=0))[0]
+        for h in cols:
+            col = trace[:, h]
+            m = col >= 0
+            self.corpus[wid[m], h] = col[m]
+
+    # -- the jitted advance wrapper --------------------------------------------
+    def _advance(self, batch: WalkBatch, wid: np.ndarray):
+        """Run advance_pair on the resident pair; returns updated host batch."""
+        n = len(batch)
+        N = pow2_pad(n)
+        pad = N - n
+
+        def pad32(x, fill):
+            return jnp.asarray(
+                np.concatenate([x.astype(np.int32), np.full(pad, fill, np.int32)])
+            )
+
+        prev = pad32(batch.prev, 0)
+        cur = pad32(batch.cur, 0)
+        hop = pad32(batch.hop, 0)
+        alive = jnp.asarray(
+            np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
+        )
+        t0 = time.perf_counter()
+        out = advance_pair(
+            *self.pair.device_args(),
+            prev, cur, hop, alive, self._next_key(),
+            jnp.int32(self.task.length), jnp.float32(self.task.decay),
+            jnp.float32(getattr(self.task.model, "p", 1.0)),
+            jnp.float32(getattr(self.task.model, "q", 1.0)),
+            order=self.order, k_max=self.k_max, n_iters=self.n_iters,
+            record=self.record_walks, has_alias=self.has_alias,
+            max_len=int(self.task.length),
+        )
+        prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
+            np.asarray, jax.block_until_ready(out)
+        )
+        self.stats.exec_time += time.perf_counter() - t0
+        self.stats.steps_sampled += int(steps)
+        if self.record_walks:
+            self._record_trace(wid, trace[:n])
+        new_batch = WalkBatch(batch.src, prev_f[:n], cur_f[:n], hop_f[:n])
+        return new_batch, alive_f[:n]
+
+    # -- initialization stage (paper App. B step 1) -----------------------------
+    def _initialize(self) -> None:
+        """First-order init: advance walks inside their source block until
+        they leave it or terminate, guaranteeing B(u) != B(v) for every
+        persisted walk."""
+        src = self._pending_init_src
+        self._pending_init_src = None
+        wid_all = np.arange(src.shape[0], dtype=np.int64)
+        src_blocks = block_of(self.bg.block_starts, src)
+        uniq = np.unique(src_blocks)
+        for k, b in enumerate(uniq):
+            blk = self.blocks.get(int(b), sequential=True)
+            if k + 1 < len(uniq):
+                self.blocks.prefetch(int(uniq[k + 1]))
+            self.pair.set_slot(0, blk)
+            self.pair.set_slot(1, blk)
+            m = src_blocks == b
+            batch = WalkBatch(src[m], src[m], src[m], np.zeros(m.sum(), np.int32))
+            wid = wid_all[m]
+            batch, alive = self._advance(batch, wid)
+            batch, wid = self._retire(batch, wid, alive)
+            self._persist(batch, wid)
+
+    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def result(self) -> WalkResult:
+        return WalkResult(
+            num_walks=self.num_walks,
+            steps_sampled=self.stats.steps_sampled,
+            endpoint_counts=self.endpoint_counts,
+            corpus=self.corpus,
+            stats=self.stats,
+            block_store_counters=self.blocks.counters(),
+        )

@@ -1,0 +1,217 @@
+"""GraSorw: the bi-block engine (the paper's system).
+
+Triangular bi-block scheduling (§4.2), skewed walk storage + bucket
+management (§4.3), bucket-extending (Alg. 2), learning-based block loading
+(§5).  Blocks come in through the :class:`repro.io.BlockStore` — the
+triangular schedule knows the next ancillary block before the current bucket
+finishes, so the store prefetches it under the jitted advance call.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.buckets import split_into_buckets
+from repro.core.graph import BlockedGraph, block_of
+from repro.core.loader import BlockLoadingModel
+from repro.core.stats import SSD, DevicePreset
+from repro.core.transition import WalkTask
+from repro.core.walk import WalkBatch
+
+from .base import EngineBase, WalkResult
+
+__all__ = ["BiBlockEngine"]
+
+
+class BiBlockEngine(EngineBase):
+    """Triangular bi-block scheduling + skewed storage + buckets + LBL."""
+
+    def __init__(
+        self,
+        bg: BlockedGraph,
+        task: WalkTask,
+        *,
+        loading: str = "auto",
+        bucket_extending: bool = True,
+        preset: DevicePreset = SSD,
+        record_walks: bool = False,
+        **kw,
+    ):
+        super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
+        self.loader = BlockLoadingModel(bg.num_blocks, mode=loading)
+        self.bucket_extending = bucket_extending
+
+    # skewed storage: persist with min(B(u), B(v)); first-order models never
+    # read prev, so they use the traditional B(cur) association (§7.8)
+    def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
+        if len(batch) == 0:
+            return
+        if self.order == 1:
+            assoc = block_of(self.bg.block_starts, batch.cur)
+        else:
+            assoc = np.minimum(
+                block_of(self.bg.block_starts, batch.prev),
+                block_of(self.bg.block_starts, batch.cur),
+            )
+        for b in np.unique(assoc):
+            m = assoc == b
+            self.pool.push(int(b), batch.select(m), wid[m])
+
+    #: modelled in-memory cost per sampled step (feeds the LR exec component)
+    STEP_COST = 2.0e-8
+
+    def _load_ancillary(self, i: int, n_bucket_walks: int, activated: np.ndarray):
+        """Load block i with the learned method; meter; return (decision,
+        eta, load_cost) — execution cost is added before feeding the model
+        (the paper's t_f / t_o cover loading *and* executing, §5.2.1)."""
+        blk = self.blocks.get(i, charge=False)
+        nv = int(self.bg.block_nverts[i])
+        decision = self.loader.choose(i, n_bucket_walks, nv)
+        eta = n_bucket_walks / max(nv, 1)
+        if decision == "full":
+            nbytes = blk.nbytes_full()
+            cost = self.stats.preset.seq_cost(nbytes)
+            self.stats.block_load(i, nbytes, sequential=True)
+        else:
+            nbytes = self.bg.activated_load_bytes(activated)
+            n_act = np.unique(activated).size
+            cost = self.stats.preset.rand_cost(n_act, nbytes)
+            self.stats.ondemand_load(n_act, nbytes)
+        self.pair.set_slot(1, blk)
+        return decision, eta, cost
+
+    def _meter_extension(self, i: int, batch_before: WalkBatch, batch_after: WalkBatch) -> float:
+        """On-demand loads gather extension vertices reached mid-advance.
+        Returns the modelled cost of those gathers."""
+        s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
+        touched = batch_after.cur[(batch_after.cur >= s) & (batch_after.cur < e)]
+        pre = np.unique(
+            np.concatenate(
+                [
+                    batch_before.cur[(batch_before.cur >= s) & (batch_before.cur < e)],
+                    batch_before.prev[(batch_before.prev >= s) & (batch_before.prev < e)],
+                ]
+            )
+        )
+        ext = np.setdiff1d(np.unique(touched), pre, assume_unique=False)
+        if ext.size:
+            nbytes = self.bg.activated_load_bytes(ext)
+            self.stats.ondemand_load(ext.size, nbytes)
+            return self.stats.preset.rand_cost(ext.size, nbytes)
+        return 0.0
+
+    def run(self) -> WalkResult:
+        if self.order == 1:
+            return self._run_first_order()
+        self._initialize()
+        NB = self.bg.num_blocks
+        guard = 0
+        while self.unfinished > 0:
+            guard += 1
+            if guard > self.task.length * NB + 10:
+                raise RuntimeError("engine failed to converge (bug)")
+            self.stats.supersteps += 1
+            for b in range(NB - 1):
+                if self.pool.counts[b] == 0:
+                    continue
+                batch, wid = self.pool.load(b)
+                self.stats.time_slots += 1
+                blk_b = self.blocks.get(b, sequential=True)
+                self.pair.set_slot(0, blk_b)
+                # wid-aligned buckets: pending maps bucket id -> (batch, wid)
+                pending: Dict[int, Tuple[WalkBatch, np.ndarray]] = (
+                    split_into_buckets(self.bg.block_starts, batch, b, wid)
+                )
+                i = b  # ancillary cursor: strictly increasing (triangular)
+                while True:
+                    remaining = sorted(k for k in pending if k > i)
+                    if not remaining:
+                        break
+                    i = remaining[0]
+                    # the schedule already knows the next ancillary block:
+                    # overlap its materialisation with this bucket's advance
+                    if len(remaining) > 1:
+                        self.blocks.prefetch(remaining[1])
+                    bucket, bwid = pending.pop(i)
+                    self.stats.bucket_executions += 1
+                    activated = np.concatenate([bucket.prev, bucket.cur])
+                    s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
+                    activated = activated[(activated >= s) & (activated < e)]
+                    decision, eta, cost = self._load_ancillary(i, len(bucket), activated)
+                    before = bucket
+                    steps_before = self.stats.steps_sampled
+                    bucket, alive = self._advance(bucket, bwid)
+                    if decision == "ondemand":
+                        cost += self._meter_extension(i, before, bucket)
+                    cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
+                    self.loader.observe(i, eta, cost, decision)
+                    bucket, bwid = self._retire(bucket, bwid, alive)
+                    if len(bucket) == 0:
+                        continue
+                    # Alg. 2 routing
+                    pre_blk = block_of(self.bg.block_starts, bucket.prev)
+                    cur_blk = block_of(self.bg.block_starts, bucket.cur)
+                    extend = (
+                        (cur_blk > i) & (pre_blk == b)
+                        if self.bucket_extending
+                        else np.zeros(len(bucket), bool)
+                    )
+                    # persist the non-extending walks with min-rule
+                    self._persist(bucket.select(~extend), bwid[~extend])
+                    if extend.any():
+                        ext_batch = bucket.select(extend)
+                        ext_wid = bwid[extend]
+                        for nb in np.unique(cur_blk[extend]):
+                            m = cur_blk[extend] == nb
+                            nb = int(nb)
+                            if nb in pending:
+                                pb, pw = pending[nb]
+                                pending[nb] = (
+                                    WalkBatch.concat([pb, ext_batch.select(m)]),
+                                    np.concatenate([pw, ext_wid[m]]),
+                                )
+                            else:
+                                pending[nb] = (ext_batch.select(m), ext_wid[m])
+        res = self.result()
+        res.loader_summary = self.loader.summary()
+        return res
+
+    def _run_first_order(self) -> WalkResult:
+        """§7.8: first-order walks need only the current block; iteration
+        scheduling + the learning-based loader on the current block itself
+        ("heavy block loads become light vertex I/Os once few walks remain")."""
+        self._initialize()
+        NB = self.bg.num_blocks
+        guard = 0
+        while self.unfinished > 0:
+            guard += 1
+            if guard > self.task.length * NB + 10:
+                raise RuntimeError("engine failed to converge (bug)")
+            self.stats.supersteps += 1
+            for b in range(NB):
+                if self.pool.counts[b] == 0:
+                    continue
+                batch, wid = self.pool.load(b)
+                self.stats.time_slots += 1
+                self.stats.bucket_executions += 1
+                activated = batch.cur
+                decision, eta, cost = self._load_ancillary(b, len(batch), activated)
+                self.pair.set_slot(0, self.blocks.get(b, charge=False))
+                # iteration order makes the next current block predictable
+                nxt = next((j for j in range(b + 1, NB) if self.pool.counts[j] > 0), None)
+                if nxt is not None:
+                    self.blocks.prefetch(nxt)
+                before = batch
+                steps_before = self.stats.steps_sampled
+                batch, alive = self._advance(batch, wid)
+                if decision == "ondemand":
+                    cost += self._meter_extension(b, before, batch)
+                cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
+                self.loader.observe(b, eta, cost, decision)
+                batch, wid = self._retire(batch, wid, alive)
+                self._persist(batch, wid)
+        res = self.result()
+        res.loader_summary = self.loader.summary()
+        return res

@@ -1,0 +1,95 @@
+"""In-memory oracle / corpus generator (whole-graph fast path)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import BlockedGraph
+from repro.core.stats import IOStats
+from repro.core.transition import Node2vec, WalkTask
+
+from .base import WalkResult
+from .step import advance_pair, pow2_pad
+
+__all__ = ["InMemoryWalker"]
+
+
+class InMemoryWalker:
+    """Whole-graph walker: one jit'd while_loop over steps.  Ground truth for
+    engine tests and the corpus generator feeding the LM data pipeline."""
+
+    def __init__(self, bg: BlockedGraph, task: WalkTask, *, k_max: int = 16):
+        self.bg = bg
+        self.task = task
+        self.k_max = 1 if (isinstance(task.model, Node2vec)
+                           and task.model.p == task.model.q == 1.0) else k_max
+        if task.model.order == 1:
+            self.k_max = 1
+
+    def run(self, *, record_walks: bool = True) -> WalkResult:
+        bg, task = self.bg, self.task
+        g = bg.graph
+        stats = IOStats()
+        src = task.initial_walks(g.num_vertices)
+        n = src.shape[0]
+        # whole graph as a single resident "pair" (slot 1 unused)
+        indptr = np.zeros((2, g.num_vertices + 1), np.int32)
+        indptr[0] = g.indptr.astype(np.int32)
+        indptr[1] = 0
+        indices = np.full((2, max(g.num_edges, 1)), -1, np.int32)
+        indices[0, : g.num_edges] = g.indices
+        pair_start = np.array([0, g.num_vertices], np.int32)
+        pair_nverts = np.array([g.num_vertices, 0], np.int32)
+        has_alias = g.weights is not None
+        if has_alias:
+            from repro.core.sampling import build_alias_rows
+
+            aj, aq = build_alias_rows(
+                indptr[0], g.num_vertices, max(g.num_edges, 1), g.weights
+            )
+            alias_j = np.stack([aj, aj])
+            alias_q = np.stack([aq, aq])
+        else:
+            alias_j = np.zeros_like(indices)
+            alias_q = np.ones(indices.shape, np.float32)
+
+        N = pow2_pad(n)
+        pad = N - n
+        pad32 = lambda x: jnp.asarray(
+            np.concatenate([x.astype(np.int32), np.zeros(pad, np.int32)])
+        )
+        alive = jnp.asarray(np.concatenate([np.ones(n, bool), np.zeros(pad, bool)]))
+        t0 = time.perf_counter()
+        out = advance_pair(
+            jnp.asarray(pair_start), jnp.asarray(pair_nverts),
+            jnp.asarray(indptr), jnp.asarray(indices),
+            jnp.asarray(alias_j), jnp.asarray(alias_q),
+            pad32(src), pad32(src), pad32(np.zeros(n)), alive,
+            jax.random.PRNGKey(task.seed),
+            jnp.int32(task.length), jnp.float32(task.decay),
+            jnp.float32(getattr(task.model, "p", 1.0)),
+            jnp.float32(getattr(task.model, "q", 1.0)),
+            order=task.model.order, k_max=self.k_max,
+            n_iters=int(np.ceil(np.log2(max(g.num_edges, 2)))) + 2,
+            record=record_walks, has_alias=has_alias, max_len=int(task.length),
+        )
+        prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
+            np.asarray, jax.block_until_ready(out)
+        )
+        stats.exec_time = time.perf_counter() - t0
+        stats.steps_sampled = int(steps)
+        counts = np.bincount(cur_f[:n], minlength=g.num_vertices).astype(np.int64)
+        corpus = None
+        if record_walks:
+            corpus = np.full((n, task.length + 1), -1, np.int32)
+            corpus[:, 0] = src
+            t = trace[:n]
+            for h in range(1, task.length + 1):
+                m = t[:, h] >= 0
+                corpus[m, h] = t[m, h]
+        return WalkResult(n, int(steps), counts, corpus, stats)

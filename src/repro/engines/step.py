@@ -1,0 +1,161 @@
+"""The jitted pair-advance step shared by every engine.
+
+Vectorised Alg. 2 ``UpdateWalk``: alias/uniform proposal + Node2vec rejection
+test with binary-search membership (:mod:`repro.core.sampling`); the Pallas
+kernel in :mod:`repro.kernels.node2vec_step` is the TPU version of exactly
+this loop.  ``pair_advance_impl`` is the raw function (reused inside
+``shard_map`` by :mod:`repro.core.distributed`); ``advance_pair`` the jitted
+host entry point.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["pair_advance_impl", "advance_pair", "pow2_pad"]
+
+
+def pair_advance_impl(
+    pair_start,      # [2] i32 — global first-vertex of each resident block
+    pair_nverts,     # [2] i32
+    indptr,          # [2, MV+1] i32 (block-local offsets)
+    indices,         # [2, ME]   i32 (global ids, sorted per row)
+    alias_j,         # [2, ME]   i32 (local alias slots; dummy if not has_alias)
+    alias_q,         # [2, ME]   f32
+    prev,            # [N] i32
+    cur,             # [N] i32
+    hop,             # [N] i32
+    alive,           # [N] bool — not yet terminated
+    key,             # PRNG key
+    length,          # () i32 — walk length in edges
+    decay,           # () f32 — per-step continue probability (1.0 = fixed len)
+    p,               # () f32 — node2vec return parameter
+    q,               # () f32 — node2vec in-out parameter
+    *,
+    order: int,
+    k_max: int,
+    n_iters: int,
+    record: bool,
+    has_alias: bool,
+    max_len: int,
+):
+    """Advance every walk until it leaves the resident pair or terminates.
+
+    Vectorised Alg. 2 ``UpdateWalk``: "walks keep moving while they jump
+    between the two blocks in memory".  Returns
+    ``(prev, cur, hop, alive, steps_taken, trace)`` where ``trace[n, h]`` is
+    the vertex walk n reached at hop h during this call (-1 = no move).
+    """
+    N = prev.shape[0]
+    ME = indices.shape[1]
+    flat_indices = indices.reshape(-1)
+    flat_alias_j = alias_j.reshape(-1)
+    flat_alias_q = alias_q.reshape(-1)
+    max_bias = jnp.maximum(1.0, jnp.maximum(1.0 / p, 1.0 / q))
+    # one spare "dump" column (max_len+1) absorbs writes of frozen walks
+    trace0 = jnp.full((N, max_len + 2) if record else (1, 1), -1, dtype=jnp.int32)
+    iota = jnp.arange(N)
+
+    def in_pair(v):
+        return ((v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])) | (
+            (v >= pair_start[1]) & (v < pair_start[1] + pair_nverts[1])
+        )
+
+    def locate(v):
+        in0 = (v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])
+        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
+        row = jnp.clip(v - pair_start[slot], 0, indptr.shape[1] - 2)
+        return slot, row
+
+    def cond(state):
+        _, _, _, _, resident, _, _, _, it = state
+        return jnp.any(resident) & (it <= max_len)
+
+    def body(state):
+        prev_, cur_, hop_, alive_, resident, key_, steps_, trace_, it = state
+        key_, k_prop, k_term = jax.random.split(key_, 3)
+
+        movable = resident  # alive & cur in pair
+        slot, row = locate(cur_)
+        row_start = indptr[slot, row]
+        deg = indptr[slot, row + 1] - row_start
+        dead = movable & (deg <= 0)
+        movable = movable & (deg > 0)
+        deg_c = jnp.maximum(deg, 1)
+
+        if order == 2:
+            uslot, urow = locate(prev_)
+            u_start = indptr[uslot, urow]
+            ulo = uslot * ME + u_start
+            uhi = ulo + (indptr[uslot, urow + 1] - u_start)
+
+        # ---- proposal + rejection over k_max rounds -------------------------
+        def propose(kk, carry):
+            z_, accepted_, key_p = carry
+            key_p, k1 = jax.random.split(key_p)
+            u123 = jax.random.uniform(k1, (3, N))
+            kloc = jnp.minimum((u123[0] * deg_c).astype(jnp.int32), deg_c - 1)
+            idx = slot * ME + row_start + kloc
+            if has_alias:
+                take_alias = u123[1] >= flat_alias_q[idx]
+                kloc = jnp.where(take_alias, flat_alias_j[idx], kloc)
+                idx = slot * ME + row_start + kloc
+            zk = flat_indices[idx]
+            if order == 2:
+                from repro.core.sampling import searchsorted_rows
+
+                memb = searchsorted_rows(flat_indices, ulo, uhi, zk, n_iters=n_iters)
+                bias = jnp.where(zk == prev_, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
+                acc_p = bias / max_bias
+                acc_p = jnp.where(hop_ == 0, 1.0, acc_p)  # first step: 1st-order
+            else:
+                acc_p = jnp.ones((N,), jnp.float32)
+            last = kk == k_max - 1
+            take = (~accepted_) & movable & ((u123[2] < acc_p) | last)
+            z_ = jnp.where(take, zk, z_)
+            return z_, accepted_ | take, key_p
+
+        z, _, _ = jax.lax.fori_loop(0, k_max, propose, (cur_, ~movable, k_prop))
+
+        # ---- commit ----------------------------------------------------------
+        new_hop = hop_ + movable.astype(jnp.int32)
+        new_prev = jnp.where(movable, cur_, prev_)
+        new_cur = jnp.where(movable, z, cur_)
+        finished = movable & (new_hop >= length)
+        stopped = movable & (jax.random.uniform(k_term, (N,)) >= decay)
+        new_alive = alive_ & ~dead & ~finished & ~stopped
+        new_resident = new_alive & in_pair(new_cur)
+        if record:
+            cols = jnp.where(movable, jnp.clip(new_hop, 0, max_len), max_len + 1)
+            trace_ = trace_.at[iota, cols].set(new_cur)
+        steps_ = steps_ + movable.astype(jnp.int32).sum()
+        return (new_prev, new_cur, new_hop, new_alive, new_resident, key_,
+                steps_, trace_, it + 1)
+
+    resident0 = alive & in_pair(cur)
+    init = (prev, cur, hop, alive, resident0, key,
+            jnp.zeros((), jnp.int32), trace0, jnp.zeros((), jnp.int32))
+    prev_f, cur_f, hop_f, alive_f, _, _, steps, trace, _ = jax.lax.while_loop(
+        cond, body, init
+    )
+    if record:
+        trace = trace[:, : max_len + 1]
+    return prev_f, cur_f, hop_f, alive_f, steps, trace
+
+
+#: jitted entry point (host engines); the raw impl is reused inside shard_map
+advance_pair = partial(
+    jax.jit,
+    static_argnames=("order", "k_max", "n_iters", "record", "has_alias", "max_len"),
+)(pair_advance_impl)
+
+
+def pow2_pad(n: int, lo: int = 256) -> int:
+    """Next power of two >= n (>= lo) — static shapes for the jit cache."""
+    m = lo
+    while m < n:
+        m <<= 1
+    return m

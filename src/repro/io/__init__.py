@@ -1,0 +1,19 @@
+"""Storage/I/O subsystem: walk pools (the "disk" tier for walk state) and the
+block store (resident-block cache + background prefetch).
+
+Engines in :mod:`repro.engines` persist walks exclusively through a
+:class:`WalkPool` backend and load graph blocks exclusively through a
+:class:`BlockStore`; this package is the seam for sharded pools, async
+bucket pipelines and multi-device walkers.
+"""
+
+from .blockstore import BlockStore
+from .walkpool import DiskWalkPool, MemoryWalkPool, WalkPool, make_walk_pool
+
+__all__ = [
+    "BlockStore",
+    "DiskWalkPool",
+    "MemoryWalkPool",
+    "WalkPool",
+    "make_walk_pool",
+]

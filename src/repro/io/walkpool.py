@@ -1,0 +1,267 @@
+"""Walk pools — the "disk" tier for partially-finished walks (paper §4.3/§6.1).
+
+A :class:`WalkPool` owns one append-only pool per block.  Engines ``push``
+walks to the pool of the block they persist with (skewed ``min(B(u), B(v))``
+or traditional ``B(cur)`` association — the *engine* decides the key, the
+pool only stores) and ``load`` drains a whole pool at the start of that
+block's time slot.
+
+Both backends buffer pushes in memory and *spill* once a block's buffer
+reaches ``flush_walks`` (the paper's walk-pool write buffer); a ``load``
+first seals the buffer, then returns spilled + buffered walks in exact push
+order, so the two backends are observationally identical to the engines:
+
+* :class:`MemoryWalkPool` — spills into a host-memory list; the spill/read
+  I/O is *modelled* (charged to :class:`~repro.core.stats.IOStats`) but no
+  bytes move.  This is the seed engine's behavior, extracted.
+* :class:`DiskWalkPool` — spills real 16-byte packed records
+  (:func:`repro.core.walk.pack_walks`, §6.1 Fig. 7) to one append-only file
+  per block, so ``IOStats.walk_bytes_written`` equals bytes on disk.  Walk
+  ids ride in an int64 sidecar file: they are host bookkeeping for corpus
+  recording, not part of the paper's record, and are not charged.
+
+Only spilled walks are charged: a walk that never left the write buffer
+never crossed the slow/fast boundary.  ``flush_walks=0`` spills every push
+(the seed's accounting), ``flush_walks=None`` never spills before a load.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.stats import IOStats
+from repro.core.walk import WALK_BYTES, WalkBatch, pack_walks, unpack_walks
+
+__all__ = ["WalkPool", "MemoryWalkPool", "DiskWalkPool", "make_walk_pool"]
+
+_WID_BYTES = 8
+
+
+@runtime_checkable
+class WalkPool(Protocol):
+    """Per-block walk storage; see the module docstring for the contract."""
+
+    backend: str
+    counts: np.ndarray  # [NB] int64 — walks currently stored per block
+    min_hop: np.ndarray  # [NB] float64 — min hop per block (inf when empty)
+
+    def push(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None: ...
+
+    def load(self, b: int) -> Tuple[WalkBatch, np.ndarray]: ...
+
+    def peek(self, b: int) -> Tuple[WalkBatch, np.ndarray]: ...
+
+    def flush(self, b: Optional[int] = None) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class _PoolBase:
+    """Shared buffering, counting and spill-threshold logic."""
+
+    backend = "base"
+
+    def __init__(self, num_blocks: int, stats: IOStats,
+                 flush_walks: Optional[int] = 1 << 18):
+        self.num_blocks = num_blocks
+        self.stats = stats
+        self.flush_walks = flush_walks
+        self.counts = np.zeros(num_blocks, np.int64)
+        self.min_hop = np.full(num_blocks, np.inf)
+        self._buf: Dict[int, List[Tuple[WalkBatch, np.ndarray]]] = {
+            b: [] for b in range(num_blocks)
+        }
+        self._buf_counts = np.zeros(num_blocks, np.int64)
+
+    # -- subclass hooks -------------------------------------------------------
+    def _spill(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def _read_spilled(self, b: int, *, consume: bool) -> Tuple[WalkBatch, np.ndarray]:
+        raise NotImplementedError
+
+    def _spilled_count(self, b: int) -> int:
+        raise NotImplementedError
+
+    # -- the engine-facing API ------------------------------------------------
+    def push(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        if len(batch) == 0:
+            return
+        self._buf[b].append((batch, wid))
+        self._buf_counts[b] += len(batch)
+        self.counts[b] += len(batch)
+        self.min_hop[b] = min(self.min_hop[b], float(batch.hop.min()))
+        if self.flush_walks is not None and self._buf_counts[b] >= self.flush_walks:
+            self.flush(b)
+
+    def flush(self, b: Optional[int] = None) -> None:
+        """Spill buffered walks to the slow tier (charged as walk writes)."""
+        blocks = range(self.num_blocks) if b is None else (b,)
+        for blk in blocks:
+            entries = self._buf[blk]
+            if not entries:
+                continue
+            self._buf[blk] = []
+            n = int(self._buf_counts[blk])
+            self._buf_counts[blk] = 0
+            batch = WalkBatch.concat([e[0] for e in entries])
+            wid = np.concatenate([e[1] for e in entries])
+            self._spill(blk, batch, wid)
+            self.stats.walk_io(n, kind="write")
+
+    def load(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        """Drain pool ``b``: spilled walks (charged as a read) + buffer."""
+        n_spilled = self._spilled_count(b)
+        spilled_batch, spilled_wid = self._read_spilled(b, consume=True)
+        if n_spilled:
+            self.stats.walk_io(n_spilled, kind="read")
+        entries = self._buf[b]
+        self._buf[b] = []
+        self._buf_counts[b] = 0
+        self.counts[b] = 0
+        self.min_hop[b] = np.inf
+        batch = WalkBatch.concat([spilled_batch] + [e[0] for e in entries])
+        wid = np.concatenate([spilled_wid] + [e[1] for e in entries])
+        return batch, wid
+
+    def peek(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        """Inspect pool ``b`` without consuming or charging (tests/debug)."""
+        spilled_batch, spilled_wid = self._read_spilled(b, consume=False)
+        entries = self._buf[b]
+        batch = WalkBatch.concat([spilled_batch] + [e[0] for e in entries])
+        wid = np.concatenate([spilled_wid] + [e[1] for e in entries])
+        return batch, wid
+
+    def close(self) -> None:
+        pass
+
+
+class MemoryWalkPool(_PoolBase):
+    """Host-memory pools; spill I/O is modelled, not performed."""
+
+    backend = "memory"
+
+    def __init__(self, num_blocks: int, stats: IOStats,
+                 flush_walks: Optional[int] = 1 << 18):
+        super().__init__(num_blocks, stats, flush_walks)
+        self._spilled: Dict[int, List[Tuple[WalkBatch, np.ndarray]]] = {
+            b: [] for b in range(num_blocks)
+        }
+        self._spilled_counts = np.zeros(num_blocks, np.int64)
+
+    def _spill(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        self._spilled[b].append((batch, wid))
+        self._spilled_counts[b] += len(batch)
+
+    def _spilled_count(self, b: int) -> int:
+        return int(self._spilled_counts[b])
+
+    def _read_spilled(self, b: int, *, consume: bool) -> Tuple[WalkBatch, np.ndarray]:
+        entries = self._spilled[b]
+        if consume:
+            self._spilled[b] = []
+            self._spilled_counts[b] = 0
+        if not entries:
+            return WalkBatch.empty(), np.zeros(0, np.int64)
+        return (
+            WalkBatch.concat([e[0] for e in entries]),
+            np.concatenate([e[1] for e in entries]),
+        )
+
+
+class DiskWalkPool(_PoolBase):
+    """Real per-block append-only files of 16-byte packed walk records."""
+
+    backend = "disk"
+
+    def __init__(
+        self,
+        num_blocks: int,
+        stats: IOStats,
+        block_starts: np.ndarray,
+        flush_walks: Optional[int] = 1 << 18,
+        directory: Optional[str] = None,
+    ):
+        super().__init__(num_blocks, stats, flush_walks)
+        self.block_starts = np.asarray(block_starts, dtype=np.int64)
+        self._tmpdir: Optional[tempfile.TemporaryDirectory] = None
+        if directory is None:
+            self._tmpdir = tempfile.TemporaryDirectory(prefix="grasorw_pool_")
+            directory = self._tmpdir.name
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self._spilled_counts = np.zeros(num_blocks, np.int64)
+        self.bytes_written = 0
+
+    def record_path(self, b: int) -> str:
+        return os.path.join(self.directory, f"pool_{b:05d}.walks")
+
+    def _wid_path(self, b: int) -> str:
+        return os.path.join(self.directory, f"pool_{b:05d}.wid")
+
+    def on_disk_bytes(self) -> int:
+        """Current total size of all record files (16 bytes per stored walk)."""
+        return sum(
+            os.path.getsize(p)
+            for b in range(self.num_blocks)
+            if os.path.exists(p := self.record_path(b))
+        )
+
+    def _spill(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        packed = pack_walks(batch, self.block_starts)
+        with open(self.record_path(b), "ab") as f:
+            f.write(packed.tobytes())
+        with open(self._wid_path(b), "ab") as f:
+            f.write(np.asarray(wid, dtype=np.int64).tobytes())
+        self._spilled_counts[b] += len(batch)
+        self.bytes_written += len(batch) * WALK_BYTES
+
+    def _spilled_count(self, b: int) -> int:
+        return int(self._spilled_counts[b])
+
+    def _read_spilled(self, b: int, *, consume: bool) -> Tuple[WalkBatch, np.ndarray]:
+        n = int(self._spilled_counts[b])
+        if n == 0:
+            return WalkBatch.empty(), np.zeros(0, np.int64)
+        with open(self.record_path(b), "rb") as f:
+            raw = f.read()
+        packed = np.frombuffer(raw, dtype=np.uint32).reshape(-1, 4)
+        assert packed.shape[0] == n, "record file out of sync with pool counts"
+        with open(self._wid_path(b), "rb") as f:
+            wid = np.frombuffer(f.read(), dtype=np.int64)
+        batch = unpack_walks(packed, self.block_starts)
+        if consume:
+            os.remove(self.record_path(b))
+            os.remove(self._wid_path(b))
+            self._spilled_counts[b] = 0
+        return batch, wid.copy()
+
+    def close(self) -> None:
+        if self._tmpdir is not None:
+            self._tmpdir.cleanup()
+            self._tmpdir = None
+
+
+def make_walk_pool(
+    backend,
+    *,
+    num_blocks: int,
+    stats: IOStats,
+    block_starts: Optional[np.ndarray] = None,
+    flush_walks: Optional[int] = 1 << 18,
+    directory: Optional[str] = None,
+) -> WalkPool:
+    """Build a pool from a backend name, or pass an instance through."""
+    if not isinstance(backend, str):
+        return backend
+    if backend == "memory":
+        return MemoryWalkPool(num_blocks, stats, flush_walks)
+    if backend == "disk":
+        if block_starts is None:
+            raise ValueError("disk pool needs block_starts for the 128-bit encoding")
+        return DiskWalkPool(num_blocks, stats, block_starts, flush_walks, directory)
+    raise ValueError(f"unknown walk pool backend {backend!r}; have memory, disk")

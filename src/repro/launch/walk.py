@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--loading", default="auto",
                     choices=("auto", "full", "ondemand"))
+    ap.add_argument("--pool", default="memory", choices=("memory", "disk"),
+                    help="walk-pool backend (repro.io)")
+    ap.add_argument("--pool-flush-walks", type=int, default=1 << 18,
+                    help="walk-pool spill threshold")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable BlockStore background prefetch")
     args = ap.parse_args()
 
     from repro.core import (
@@ -56,21 +62,26 @@ def main():
         task = deepwalk_task(walks_per_vertex=args.walks_per_vertex,
                              length=args.length, seed=args.seed)
 
+    pool_kw = dict(pool=args.pool, pool_flush_walks=args.pool_flush_walks,
+                   prefetch=not args.no_prefetch)
     engines = args.engine or ["biblock", "sogw"]
-    print("engine,block_ios,vertex_ios,ondemand_ios,sim_io_s,exec_s,sim_wall_s")
+    print("engine,block_ios,vertex_ios,ondemand_ios,walk_bytes_written,"
+          "prefetch_hits,sim_io_s,exec_s,sim_wall_s")
     for name in engines:
         if name == "biblock":
-            res = BiBlockEngine(bg, task, loading=args.loading).run()
+            res = BiBlockEngine(bg, task, loading=args.loading, **pool_kw).run()
         elif name == "pb":
-            res = PlainBucketEngine(bg, task).run()
+            res = PlainBucketEngine(bg, task, **pool_kw).run()
         elif name == "sogw":
-            res = SOGWEngine(bg, task).run()
+            res = SOGWEngine(bg, task, **pool_kw).run()
         elif name == "sgsc":
-            res = SOGWEngine(bg, task, static_cache=True).run()
+            res = SOGWEngine(bg, task, static_cache=True, **pool_kw).run()
         else:
             res = InMemoryWalker(bg, task).run(record_walks=False)
         s = res.stats
+        hits = (res.block_store_counters or {}).get("prefetch_hits", 0)
         print(f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
+              f"{s.walk_bytes_written},{hits},"
               f"{s.sim_io_time:.4f},{s.exec_time:.4f},{s.sim_wall_time:.4f}")
 
 

@@ -1,0 +1,106 @@
+"""Optional-import shim for `hypothesis` property-based tests.
+
+The test suite uses a small subset of hypothesis (``@given`` with
+``integers`` / ``sampled_from`` / ``lists`` strategies and ``@settings``).
+This module re-exports the real library when it is installed; otherwise it
+falls back to a deterministic, seeded sampler that runs each property over
+``max_examples`` randomly drawn (but reproducible) examples, so the tier-1
+suite collects and passes offline.
+
+Usage in tests::
+
+    from repro.testing import given, settings, st
+"""
+
+from __future__ import annotations
+
+__all__ = ["given", "settings", "st", "strategies", "HAVE_HYPOTHESIS"]
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    strategies = st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    class _StrategyNamespace:
+        """The subset of ``hypothesis.strategies`` the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                k = int(rng.integers(min_size, max_size + 1))
+                return [elem.example_from(rng) for _ in range(k)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+    st = strategies = _StrategyNamespace()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Record ``max_examples``; other hypothesis knobs are meaningless here."""
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        """Run the property over seeded examples (seed = hash of test name)."""
+
+        def deco(fn):
+            max_examples = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            # deliberately NOT functools.wraps: the wrapper must expose a
+            # bare signature so pytest does not mistake strategy parameters
+            # for fixtures
+            def wrapper(*args, **kwargs):
+                seed = zlib.adler32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(max_examples):
+                    drawn = {
+                        name: s.example_from(rng)
+                        for name, s in strategy_kwargs.items()
+                    }
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__qualname__ = fn.__qualname__
+            return wrapper
+
+        return deco

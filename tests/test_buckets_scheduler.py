@@ -1,7 +1,7 @@
 """Skewed storage, Eq.4 bucketing, triangular scheduling (paper §4)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import (
     WalkBatch,
@@ -71,9 +71,19 @@ def test_bucket_rule_eq4(n, seed, b):
     bp = block_of(starts, batch.prev)
     bc = block_of(starts, batch.cur)
     np.testing.assert_array_equal(ids, np.where(bp == b, bc, bp))
-    # and the dict split preserves every walk exactly once
-    buckets = split_into_buckets(starts, batch, b)
-    assert sum(len(v) for v in buckets.values()) == n
+    # and the wid-aligned dict split preserves every walk exactly once
+    wid = rng.permutation(n).astype(np.int64)
+    buckets = split_into_buckets(starts, batch, b, wid)
+    assert sum(len(bb) for bb, _ in buckets.values()) == n
+    seen = np.concatenate([w for _, w in buckets.values()])
+    np.testing.assert_array_equal(np.sort(seen), np.sort(wid))
+    for bid, (bb, bw) in buckets.items():
+        np.testing.assert_array_equal(bucket_ids(starts, bb, b), bid)
+        # wid stays aligned with its walk: check via the cur field
+        pos = {int(w): k for k, w in enumerate(wid)}
+        np.testing.assert_array_equal(
+            bb.cur, batch.cur[[pos[int(w)] for w in bw]]
+        )
 
 
 def test_schedulers_drain():

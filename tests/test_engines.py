@@ -135,12 +135,14 @@ def test_skewed_pool_invariant(small_blocked):
     eng = BiBlockEngine(small_blocked, task)
     eng._initialize()
     starts = small_blocked.block_starts
-    for b, entries in eng.pools.items():
-        for batch, _wid in entries:
-            bp = block_of(starts, batch.prev)
-            bc = block_of(starts, batch.cur)
-            assert np.all(bp != bc)
-            np.testing.assert_array_equal(np.minimum(bp, bc), b)
+    for b in range(small_blocked.num_blocks):
+        batch, _wid = eng.pool.peek(b)
+        if len(batch) == 0:
+            continue
+        bp = block_of(starts, batch.prev)
+        bc = block_of(starts, batch.cur)
+        assert np.all(bp != bc)
+        np.testing.assert_array_equal(np.minimum(bp, bc), b)
 
 
 def test_loader_switches_to_ondemand_late(small_blocked):

@@ -1,0 +1,188 @@
+"""Storage layer: WalkPool backends (memory/disk) and the BlockStore.
+
+Pins the PR's acceptance criteria: disk pools write real 16-byte packed
+records whose on-disk size matches the walk-byte accounting; engines are
+bit-identical across pool backends at a fixed seed; ``pool_flush_walks`` is
+the spill threshold; a prefetched block is served without a second
+``block_load`` charge.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BiBlockEngine,
+    IOStats,
+    PlainBucketEngine,
+    SOGWEngine,
+    WalkBatch,
+    pack_walks,
+    rwnv_task,
+)
+from repro.io import BlockStore, DiskWalkPool, MemoryWalkPool, make_walk_pool
+
+
+def _random_batch(rng, n, V):
+    return WalkBatch(
+        rng.integers(0, V, n), rng.integers(0, V, n),
+        rng.integers(0, V, n), rng.integers(0, 100, n).astype(np.int32),
+    )
+
+
+STARTS = np.array([0, 100, 250, 400, 600])
+
+
+# ---------------------------------------------------------------------------
+# DiskWalkPool <-> pack_walks round trip
+# ---------------------------------------------------------------------------
+
+def test_disk_pool_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    stats = IOStats()
+    pool = DiskWalkPool(4, stats, STARTS, flush_walks=8, directory=str(tmp_path))
+    pushed, wids = [], []
+    for k in range(5):
+        batch = _random_batch(rng, 7, 600)
+        wid = np.arange(7, dtype=np.int64) + 100 * k
+        pool.push(2, batch, wid)
+        pushed.append(batch)
+        wids.append(wid)
+    out, wid_out = pool.load(2)
+    ref = WalkBatch.concat(pushed)
+    np.testing.assert_array_equal(out.src, ref.src)
+    np.testing.assert_array_equal(out.prev, ref.prev)
+    np.testing.assert_array_equal(out.cur, ref.cur)
+    np.testing.assert_array_equal(out.hop, ref.hop)
+    np.testing.assert_array_equal(wid_out, np.concatenate(wids))
+    assert pool.counts[2] == 0
+    # the records on disk were the real 16-byte packed encoding
+    assert stats.walk_bytes_written == pool.bytes_written
+    assert pool.bytes_written % 16 == 0
+
+
+def test_disk_pool_on_disk_bytes_match_accounting(tmp_path):
+    rng = np.random.default_rng(1)
+    stats = IOStats()
+    pool = DiskWalkPool(4, stats, STARTS, flush_walks=0, directory=str(tmp_path))
+    total = 0
+    for b in (0, 1, 3):
+        n = int(rng.integers(5, 40))
+        pool.push(b, _random_batch(rng, n, 600), np.arange(n, dtype=np.int64))
+        total += n
+    # flush_walks=0: every push spills immediately as 16-byte records
+    assert pool.on_disk_bytes() == total * 16 == stats.walk_bytes_written
+    # file content is bit-identical to pack_walks of the stored batches
+    batch, _ = pool.peek(3)
+    with open(pool.record_path(3), "rb") as f:
+        raw = np.frombuffer(f.read(), np.uint32).reshape(-1, 4)
+    np.testing.assert_array_equal(raw, pack_walks(batch, STARTS))
+
+
+def test_pool_flush_threshold_controls_spills():
+    """pool_flush_walks is the spill threshold for every backend."""
+    stats = IOStats()
+    pool = MemoryWalkPool(2, stats, flush_walks=10)
+    rng = np.random.default_rng(2)
+    pool.push(0, _random_batch(rng, 6, 600), np.arange(6, dtype=np.int64))
+    assert stats.walk_bytes_written == 0  # below threshold: buffered only
+    pool.push(0, _random_batch(rng, 6, 600), np.arange(6, dtype=np.int64))
+    assert stats.walk_bytes_written == 12 * 16  # crossed: whole buffer spilled
+    batch, _ = pool.load(0)
+    assert len(batch) == 12
+    assert stats.walk_bytes_read == 12 * 16  # only spilled walks are re-read
+
+
+def test_pool_flush_none_never_spills_before_load():
+    stats = IOStats()
+    pool = MemoryWalkPool(2, stats, flush_walks=None)
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        pool.push(1, _random_batch(rng, 100, 600), np.zeros(100, np.int64))
+    assert stats.walk_bytes_written == 0
+    batch, _ = pool.load(1)
+    assert len(batch) == 5000 and stats.walk_bytes == 0
+
+
+def test_make_walk_pool_dispatch(tmp_path):
+    stats = IOStats()
+    assert make_walk_pool("memory", num_blocks=2, stats=stats).backend == "memory"
+    pool = make_walk_pool("disk", num_blocks=2, stats=stats, block_starts=STARTS,
+                          directory=str(tmp_path))
+    assert pool.backend == "disk"
+    assert make_walk_pool(pool, num_blocks=2, stats=stats) is pool
+    with pytest.raises(ValueError):
+        make_walk_pool("tape", num_blocks=2, stats=stats)
+    with pytest.raises(ValueError):
+        make_walk_pool("disk", num_blocks=2, stats=stats)  # needs block_starts
+
+
+# ---------------------------------------------------------------------------
+# Engines are deterministic across pool backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Engine", [BiBlockEngine, PlainBucketEngine, SOGWEngine])
+def test_engine_bitwise_identical_across_backends(small_blocked, Engine, tmp_path):
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    r_mem = Engine(small_blocked, task).run()
+    r_dsk = Engine(small_blocked, task, pool="disk", pool_flush_walks=32,
+                   pool_dir=str(tmp_path / Engine.__name__)).run()
+    np.testing.assert_array_equal(r_mem.endpoint_counts, r_dsk.endpoint_counts)
+    assert r_mem.stats.steps_sampled == r_dsk.stats.steps_sampled
+    assert r_mem.stats.block_ios == r_dsk.stats.block_ios
+    # the disk run actually moved real bytes through the pool files
+    assert r_dsk.stats.walk_bytes_written > 0
+
+
+def test_disk_pool_engine_writes_match_spills(small_blocked, tmp_path):
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    eng = BiBlockEngine(small_blocked, task, pool="disk", pool_flush_walks=16,
+                        pool_dir=str(tmp_path))
+    res = eng.run()
+    assert res.stats.walk_bytes_written == eng.pool.bytes_written > 0
+
+
+# ---------------------------------------------------------------------------
+# BlockStore: prefetch + cache semantics
+# ---------------------------------------------------------------------------
+
+def test_prefetched_block_single_charge(small_blocked):
+    stats = IOStats()
+    store = BlockStore(small_blocked, stats)
+    store.prefetch(2)
+    blk = store.get(2, sequential=True)
+    assert blk.block_id == 2
+    # exactly ONE block_load charge: prefetch itself never charges
+    assert stats.block_ios == 1
+    assert store.prefetch_hits == 1 and store.demand_loads == 0
+    store.close()
+
+
+def test_blockstore_counters_and_lru(small_blocked):
+    stats = IOStats()
+    store = BlockStore(small_blocked, stats, capacity=2, enable_prefetch=False)
+    store.prefetch(0)  # disabled: no-op
+    assert store.prefetch_issued == 0
+    store.get(0)
+    store.get(0)
+    assert store.demand_loads == 1 and store.cache_hits == 1
+    store.get(1), store.get(2)  # capacity 2: block 0 evicted
+    assert store.demand_loads == 3
+    store.get(0)  # re-materialised after eviction
+    assert store.demand_loads == 4 and store.cache_hits == 1
+    # deterministic accounting: every get() charges, cached or not
+    assert stats.block_ios == 5
+    store.close()
+
+
+def test_engine_runs_report_prefetch_hits(small_blocked):
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=0)
+    res = BiBlockEngine(small_blocked, task).run()
+    assert res.block_store_counters["prefetch_hits"] > 0
+    # prefetch must not change the deterministic I/O accounting
+    res_off = BiBlockEngine(small_blocked, task, prefetch=False).run()
+    assert res_off.block_store_counters["prefetch_hits"] == 0
+    assert res.stats.block_ios == res_off.stats.block_ios
+    assert res.stats.ondemand_ios == res_off.stats.ondemand_ios
+    np.testing.assert_array_equal(res.endpoint_counts, res_off.endpoint_counts)

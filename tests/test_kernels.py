@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import erdos_renyi, partition_into_n_blocks
 from repro.core.sampling import build_alias_rows

@@ -3,7 +3,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core.sampling import (
     alias_draw,

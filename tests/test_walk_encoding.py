@@ -1,7 +1,7 @@
 """128-bit walk record pack/unpack (paper §6.1)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import WalkBatch, pack_walks, unpack_walks
 
