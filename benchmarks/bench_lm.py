@@ -21,7 +21,7 @@ def _time(fn, *args, iters=3):
 
 
 def lm_steps() -> list[str]:
-    from repro.configs import ARCH_IDS, reduced_config
+    from repro.configs import reduced_config
     from repro.models import model_init
     from repro.optim import OptConfig, adamw_init
     from repro.train import make_train_step

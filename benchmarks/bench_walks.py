@@ -17,16 +17,24 @@ Every entry prints ``name,us_per_call,derived`` CSV rows (us_per_call =
 simulated wall time per sampled step in microseconds; derived = the
 headline ratio the paper reports for that table).
 
-The walk-pool backend is an axis: ``--pool {memory,disk}`` (or
+The storage backends are axes: ``--pool {memory,disk}`` (or
 ``BENCH_POOL=disk``) runs every engine against the chosen
-:mod:`repro.io` WalkPool backend; ``pool_prefetch_hits`` rows report the
-BlockStore prefetch overlap.
+:mod:`repro.io` WalkPool backend, and ``--graph-backend {ram,disk}`` (or
+``BENCH_GRAPH=disk``) serves graph blocks from the packed on-disk
+container (:mod:`repro.io.blockfile`) instead of the host-RAM CSR —
+recording *real* bytes moved through a file descriptor.  The
+``backend_matrix`` entry runs the full pool x graph matrix on a tiny
+graph and asserts the deterministic ``IOStats`` are identical across all
+four combinations (the CI bench-smoke job uploads its ``--json`` report).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
+import tempfile
+import zlib
 from pathlib import Path
 from typing import Callable, Dict
 
@@ -70,7 +78,66 @@ POOL_KW: Dict[str, object] = {
 def set_pool_backend(pool: str, flush_walks: int | None = None) -> None:
     POOL_KW.clear()
     POOL_KW["pool"] = pool
-    POOL_KW["pool_flush_walks"] = flush_walks or 4096
+    # 0 is meaningful (spill every push) — only None means "default"
+    POOL_KW["pool_flush_walks"] = 4096 if flush_walks is None else flush_walks
+
+
+#: graph-block axis — ``ram`` cuts blocks from the host CSR, ``disk`` writes
+#: the packed container once and serves every block via real pread()s.
+GRAPH_KW: Dict[str, object] = {
+    "backend": os.environ.get("BENCH_GRAPH", "ram"),
+    "directory": None,
+}
+_GRAPH_CACHE: Dict[tuple, object] = {}
+#: one shared scratch dir for all containers; the TemporaryDirectory
+#: finalizer removes it (and every graph.grb inside) at interpreter exit
+_GRAPH_TMPDIR: tempfile.TemporaryDirectory | None = None
+
+
+def set_graph_backend(backend: str, directory: str | None = None) -> None:
+    GRAPH_KW["backend"] = backend
+    GRAPH_KW["directory"] = directory
+    for dg in _GRAPH_CACHE.values():
+        dg.close()
+    _GRAPH_CACHE.clear()
+
+
+def _graph_dir() -> str:
+    global _GRAPH_TMPDIR
+    if GRAPH_KW["directory"]:
+        return str(GRAPH_KW["directory"])
+    if _GRAPH_TMPDIR is None:
+        _GRAPH_TMPDIR = tempfile.TemporaryDirectory(prefix="bench_graph_")
+    return _GRAPH_TMPDIR.name
+
+
+def _as_backend(bg):
+    """Route an in-RAM BlockedGraph through the selected graph backend."""
+    if GRAPH_KW["backend"] == "ram":
+        return bg
+    from repro.io import BLOCK_FILE_NAME, write_and_open
+
+    # content-keyed cache: entries building the same graph/partition twice
+    # (every entry rebuilds _default_graph) reuse one serialised container
+    g = bg.graph
+    key = (
+        zlib.crc32(np.ascontiguousarray(bg.block_starts).tobytes()),
+        zlib.crc32(np.ascontiguousarray(g.indptr).tobytes()),
+        zlib.crc32(np.ascontiguousarray(g.indices).tobytes()),
+        g.num_vertices,
+        zlib.crc32(np.ascontiguousarray(g.weights).tobytes())
+        if g.weights is not None
+        else 0,
+    )
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = write_and_open(
+            bg, _graph_dir(), name=f"{len(_GRAPH_CACHE):03d}_{BLOCK_FILE_NAME}"
+        )
+    return _GRAPH_CACHE[key]
+
+
+def _partition(g, n_blocks: int):
+    return _as_backend(partition_into_n_blocks(g, n_blocks))
 
 
 def _row(name: str, us_per_call: float, derived: str) -> str:
@@ -87,7 +154,7 @@ def _default_graph():
 
 def fig1_profile() -> list[str]:
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     rows = []
     for name, task in (
         ("deepwalk", deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
@@ -106,7 +173,7 @@ def fig1_profile() -> list[str]:
 
 def table3_engines() -> list[str]:
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     rows = []
     for tname, task in (
         ("rwnv", rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
@@ -125,9 +192,9 @@ def table3_engines() -> list[str]:
 def table4_loading() -> list[str]:
     g = _default_graph()
     rows = []
-    parts = {"seq": partition_into_n_blocks(g, N_BLOCKS)}
+    parts = {"seq": _partition(g, N_BLOCKS)}
     _, loc, _ = greedy_locality_partition(g, N_BLOCKS, rounds=2)
-    parts["metis_like"] = loc
+    parts["metis_like"] = _as_backend(loc)
     task = rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     for pname, bg in parts.items():
         r_full = BiBlockEngine(bg, task, loading="full", **POOL_KW).run()
@@ -152,7 +219,7 @@ def table6_distributions() -> list[str]:
     rows = []
     task_len = max(LENGTH // 2, 8)
     for gname, g in graphs.items():
-        bg = partition_into_n_blocks(g, N_BLOCKS)
+        bg = _partition(g, N_BLOCKS)
         task = rwnv_task(walks_per_vertex=WALKS_PV, length=task_len)
         r_so = SOGWEngine(bg, task, **POOL_KW).run()
         r_sg = SOGWEngine(bg, task, static_cache=True, **POOL_KW).run()
@@ -167,7 +234,7 @@ def table6_distributions() -> list[str]:
 
 def table7_first_order() -> list[str]:
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     task = deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     # GraphWalker baseline = SOGW machinery on a 1st-order model (no
     # previous-vertex I/O is charged because the model never needs it)
@@ -193,7 +260,7 @@ def table8_scheduling() -> list[str]:
     from repro.core import make_scheduler
 
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     rows = []
     task = deepwalk_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     for strat in ("alphabet", "iteration", "min_height", "max_sum", "graphwalker"):
@@ -210,7 +277,7 @@ def table8_scheduling() -> list[str]:
 
 def fig8_end_to_end() -> list[str]:
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     rows = []
     for tname, task in (
         ("rwnv", rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)),
@@ -240,7 +307,7 @@ def pool_backends() -> list[str]:
     advance call and the stall should shrink toward zero.
     """
     g = _default_graph()
-    bg = partition_into_n_blocks(g, N_BLOCKS)
+    bg = _partition(g, N_BLOCKS)
     task = rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH)
     BiBlockEngine(bg, task).run()  # warm the jit cache off the clock
     rows = []
@@ -263,6 +330,62 @@ def pool_backends() -> list[str]:
     return rows
 
 
+def backend_matrix() -> list[str]:
+    """CI bench-smoke: the full pool x graph backend matrix on a tiny graph.
+
+    Runs BiBlockEngine at every ``(pool, graph)`` combination and *asserts*
+    the deterministic ``IOStats`` signature (block/on-demand/walk counters
+    plus a CRC of the endpoint histogram) is identical across all four —
+    the acceptance criterion that real file I/O never changes the paper's
+    accounting.  Disk rows additionally report the real bytes that moved
+    through the container's file descriptor.
+    """
+    n = max(int(600 * SCALE), 200)
+    g = erdos_renyi(n, n * 8, seed=3)
+    bg_ram = partition_into_n_blocks(g, 4)
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=9)
+    BiBlockEngine(bg_ram, task).run()  # warm the jit cache off the clock
+
+    from repro.io import BLOCK_FILE_NAME, DiskBlockedGraph, write_block_file
+
+    path = os.path.join(_graph_dir(), f"matrix_{BLOCK_FILE_NAME}")
+    write_block_file(bg_ram, path)
+
+    rows, base_sig = [], None
+    for pool in ("memory", "disk"):
+        for gname in ("ram", "disk"):
+            bg = bg_ram if gname == "ram" else DiskBlockedGraph(path)
+            res = BiBlockEngine(bg, task, pool=pool, pool_flush_walks=32).run()
+            s = res.stats
+            sig = (
+                s.block_ios, s.block_bytes, s.ondemand_ios, s.ondemand_bytes,
+                s.steps_sampled, s.walk_bytes_written, s.walk_bytes_read,
+                zlib.crc32(np.ascontiguousarray(res.endpoint_counts).tobytes()),
+            )
+            if base_sig is None:
+                base_sig = sig
+            assert sig == base_sig, (
+                f"IOStats diverged for pool={pool} graph={gname}: "
+                f"{sig} != {base_sig}"
+            )
+            real = ""
+            if gname == "disk":
+                c = bg.counters()
+                real = (f";file_data_bytes_read={c['data_bytes_read']}"
+                        f";file_full_loads={c['full_loads']}")
+            rows.append(_row(
+                f"matrix_pool_{pool}_graph_{gname}", _us_per_step(res),
+                f"block_ios={s.block_ios};block_bytes={s.block_bytes};"
+                f"walk_bytes_written={s.walk_bytes_written};"
+                f"endpoint_crc={sig[-1]:#010x}{real}",
+            ))
+            if gname == "disk":
+                bg.close()
+    rows.append(_row("matrix_identical", 0.0,
+                     f"combos=4;signature_fields={len(base_sig)};ok=1"))
+    return rows
+
+
 ALL: Dict[str, Callable[[], list[str]]] = {
     "fig1_profile": fig1_profile,
     "table3_engines": table3_engines,
@@ -272,6 +395,7 @@ ALL: Dict[str, Callable[[], list[str]]] = {
     "table8_scheduling": table8_scheduling,
     "fig8_end_to_end": fig8_end_to_end,
     "pool_backends": pool_backends,
+    "backend_matrix": backend_matrix,
 }
 
 
@@ -284,13 +408,39 @@ def main(argv=None) -> None:
                     help="walk-pool backend for every engine run")
     ap.add_argument("--flush-walks", type=int, default=None,
                     help="pool spill threshold (disk backend)")
+    ap.add_argument("--graph-backend", choices=("ram", "disk"), default=None,
+                    help="graph-block backend for every engine run")
+    ap.add_argument("--graph-dir", default=None,
+                    help="directory for packed block files (disk graph backend)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON report (CI artifact)")
     args = ap.parse_args(argv)
-    if args.pool:
-        set_pool_backend(args.pool, args.flush_walks)
+    if args.pool or args.flush_walks is not None:
+        set_pool_backend(args.pool or str(POOL_KW["pool"]), args.flush_walks)
+    if args.graph_backend:
+        set_graph_backend(args.graph_backend, args.graph_dir)
     print("name,us_per_call,derived")
+    all_rows = []
     for name in args.names or list(ALL):
         for row in ALL[name]():
             print(row, flush=True)
+            all_rows.append(row)
+    if args.json:
+        report = {
+            "config": {
+                "scale": SCALE,
+                "pool": POOL_KW["pool"],
+                "pool_flush_walks": POOL_KW["pool_flush_walks"],
+                "graph_backend": GRAPH_KW["backend"],
+            },
+            "rows": [
+                dict(zip(("name", "us_per_call", "derived"), r.split(",", 2)))
+                for r in all_rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

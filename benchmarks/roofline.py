@@ -24,7 +24,7 @@ import dataclasses
 import json
 import re
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 __all__ = ["HW", "parse_hlo", "analyze_hlo", "roofline_terms", "model_flops"]
 

@@ -22,8 +22,9 @@ def main() -> None:
                     help="walk-pool backend for the walk benchmarks")
     ap.add_argument("--flush-walks", type=int, default=None)
     args = ap.parse_args()
-    if args.pool:
-        bench_walks.set_pool_backend(args.pool, args.flush_walks)
+    if args.pool or args.flush_walks is not None:
+        bench_walks.set_pool_backend(
+            args.pool or str(bench_walks.POOL_KW["pool"]), args.flush_walks)
 
     wanted = set(args.names)
     print("name,us_per_call,derived")

@@ -1,0 +1,134 @@
+"""Replay .github/workflows/ci.yml locally — an `act`-style dry run.
+
+Walks every job in the workflow and executes each `run:` step with bash in
+the repo root, merging workflow/job/step `env:` blocks.  Steps that cannot
+run outside the GitHub runner image are *simulated* and reported as SKIP:
+
+* `uses:` actions (checkout / setup-python / pip cache) — except
+  `upload-artifact`, whose declared paths are verified to exist, so the
+  bench-smoke contract is still checked end to end;
+* `pip install` steps (the container must not grow dependencies);
+* steps invoking tools that are not installed (e.g. `ruff`);
+* matrix legs that do not match the local interpreter — the matrix is
+  collapsed to the one leg this Python can honestly execute.
+
+Exit status is non-zero iff any executed step fails, so
+
+    python scripts/ci_dryrun.py [--timeout 900]
+
+is the local equivalent of a green/red CI run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+WORKFLOW = REPO / ".github" / "workflows" / "ci.yml"
+
+GREEN, RED, YELLOW, RESET = "\x1b[32m", "\x1b[31m", "\x1b[33m", "\x1b[0m"
+
+
+def load_workflow() -> dict:
+    try:
+        import yaml
+    except ImportError:
+        print("PyYAML is required for the dry run (python -m pip show pyyaml)")
+        raise SystemExit(2)
+    with open(WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+def have(tool: str) -> bool:
+    return shutil.which(tool) is not None
+
+
+def have_module(name: str) -> bool:
+    return importlib.util.find_spec(name) is not None
+
+
+def step_skip_reason(step: dict) -> str | None:
+    """Why this step cannot be executed locally (None = runnable)."""
+    uses = step.get("uses")
+    if uses is not None and "upload-artifact" not in uses:
+        return f"simulated action {uses}"
+    run = step.get("run", "")
+    if "pip install" in run:
+        return "pip install (container deps are frozen)"
+    if run.lstrip().startswith("ruff") and not have("ruff"):
+        return "ruff not installed here"
+    cond = step.get("if", "")
+    if "matrix.hypothesis == 'yes'" in cond:
+        return "hypothesis leg (collapsed matrix)"
+    if "matrix.hypothesis == 'no'" in cond and have_module("hypothesis"):
+        return "no-hypothesis leg, but hypothesis is installed"
+    return None
+
+
+def run_step(step: dict, env: dict, timeout: int) -> tuple[str, str]:
+    """Execute one step; returns (status, detail)."""
+    uses = step.get("uses")
+    if uses is not None and "upload-artifact" in uses:
+        paths = str(step.get("with", {}).get("path", "")).split()
+        missing = [p for p in paths if not (REPO / p).exists()]
+        if missing:
+            return "FAIL", f"artifact paths missing: {missing}"
+        return "PASS", f"artifact paths exist: {paths}"
+    proc = subprocess.run(
+        ["bash", "-eo", "pipefail", "-c", step["run"]],
+        cwd=REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        tail = (proc.stdout + proc.stderr)[-2000:]
+        return "FAIL", f"exit {proc.returncode}\n{tail}"
+    return "PASS", ""
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--timeout", type=int, default=900, help="seconds per step")
+    ap.add_argument("jobs", nargs="*", help="job ids to replay (default: all)")
+    args = ap.parse_args(argv)
+
+    wf = load_workflow()
+    failures = 0
+    for job_id, job in wf["jobs"].items():
+        if args.jobs and job_id not in args.jobs:
+            continue
+        print(f"\n== job: {job_id} ({job.get('name', job_id)}) ==")
+        env = dict(os.environ)
+        env.setdefault("PYTHONPATH", "")
+        for scope in (wf.get("env", {}), job.get("env", {})):
+            env.update({k: str(v) for k, v in scope.items()})
+        for step in job.get("steps", []):
+            label = step.get("name") or step.get("uses") or step.get("run", "")[:60]
+            reason = step_skip_reason(step)
+            if reason is not None:
+                print(f"  {YELLOW}SKIP{RESET} {label}  [{reason}]")
+                continue
+            step_env = dict(env)
+            step_env.update({k: str(v) for k, v in step.get("env", {}).items()})
+            try:
+                status, detail = run_step(step, step_env, args.timeout)
+            except subprocess.TimeoutExpired:
+                status, detail = "FAIL", f"timed out after {args.timeout}s"
+            color = GREEN if status == "PASS" else RED
+            print(f"  {color}{status}{RESET} {label}" + (f"\n{detail}" if detail else ""))
+            if status == "FAIL":
+                failures += 1
+    print(f"\n{'DRY RUN GREEN' if failures == 0 else f'{failures} step(s) FAILED'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

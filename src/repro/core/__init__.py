@@ -57,6 +57,10 @@ _LAZY = {
     "advance_pair": "repro.engines",
     "pair_advance_impl": "repro.engines",
     "BlockStore": "repro.io",
+    "BlockFileError": "repro.io",
+    "DiskBlockedGraph": "repro.io",
+    "write_block_file": "repro.io",
+    "write_and_open": "repro.io",
     "DiskWalkPool": "repro.io",
     "MemoryWalkPool": "repro.io",
     "WalkPool": "repro.io",
@@ -77,7 +81,8 @@ def __dir__():
 __all__ = [
     "BiBlockEngine", "EngineBase", "InMemoryWalker", "PlainBucketEngine",
     "SOGWEngine", "BlockStore", "DiskWalkPool", "MemoryWalkPool", "WalkPool",
-    "make_walk_pool",
+    "make_walk_pool", "BlockFileError", "DiskBlockedGraph", "write_block_file",
+    "write_and_open",
     "WalkResult", "advance_pair", "BlockedGraph", "CSRGraph", "ResidentBlock",
     "block_of", "BlockLoadingModel", "LinearCostModel",
     "greedy_locality_partition", "partition_into_n_blocks",

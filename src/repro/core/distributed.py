@@ -136,7 +136,7 @@ class DistributedWalkEngine:
     def _make_sweep(self, capacity: int):
         task, nb = self.task, self.nb
         k_max, n_iters = self.k_max, self.n_iters
-        has_alias = self.bg.graph.weights is not None
+        has_alias = self.bg.has_weights
         length = int(task.length)
         baxis = self.block_axis
         block_starts = jnp.asarray(self.bg.block_starts.astype(np.int32))
@@ -235,7 +235,7 @@ class DistributedWalkEngine:
     # -- driver -------------------------------------------------------------
     def run(self, max_sweeps: Optional[int] = None) -> dict:
         task, bg = self.task, self.bg
-        src = task.initial_walks(bg.graph.num_vertices).astype(np.int32)
+        src = task.initial_walks(bg.num_vertices).astype(np.int32)
         n = src.shape[0]
         wshards = int(np.prod([self.mesh.shape[a] for a in self.walk_axes]))
         N = int(np.ceil(n / wshards) * wshards)

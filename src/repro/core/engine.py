@@ -30,9 +30,14 @@ from repro.engines.step import pow2_pad as _pow2_pad  # noqa: F401
 __all__ = [
     "WalkResult",
     "BiBlockEngine",
+    "EngineBase",
     "PlainBucketEngine",
     "SOGWEngine",
     "InMemoryWalker",
     "advance_pair",
     "pair_advance_impl",
+    "pow2_pad",
+    "_DeviceBlockPair",
+    "_EngineBase",
+    "_pow2_pad",
 ]

@@ -25,6 +25,7 @@ __all__ = [
     "BlockedGraph",
     "ResidentBlock",
     "block_of",
+    "activated_bytes",
 ]
 
 
@@ -136,6 +137,20 @@ def block_of(block_starts: np.ndarray, v) -> np.ndarray:
     return np.searchsorted(block_starts, v, side="right") - 1
 
 
+def activated_bytes(degrees: np.ndarray, vertices: np.ndarray) -> int:
+    """Bytes an on-demand load of ``vertices`` moves: one 8-byte index-entry
+    pair plus the 4-byte neighbor cells per unique vertex (paper Fig. 5(b)).
+
+    Shared by the in-RAM :class:`BlockedGraph` and the file-backed
+    :class:`repro.io.DiskBlockedGraph` so both backends charge identically.
+    """
+    vertices = np.unique(np.asarray(vertices, dtype=np.int64))
+    if vertices.size == 0:
+        return 0
+    deg = np.asarray(degrees)[vertices].astype(np.int64)
+    return int(8 * vertices.size + 4 * deg.sum())
+
+
 @dataclasses.dataclass
 class ResidentBlock:
     """One block resident in "memory" (device arrays, statically padded).
@@ -185,6 +200,30 @@ class BlockedGraph:
         self.max_block_edges = max(int(nedges.max()), 1)
         self._build_alias = build_alias
         self._blocks: dict[int, ResidentBlock] = {}
+
+    # -- backend-neutral surface (shared with repro.io.DiskBlockedGraph) ------
+    # Engines and the BlockStore only touch this surface plus
+    # ``materialize_block``; anything reaching for ``.graph`` directly (the
+    # in-memory oracle, partitioners) requires the RAM backend.
+    @property
+    def num_vertices(self) -> int:
+        return self.graph.num_vertices
+
+    @property
+    def num_edges(self) -> int:
+        return self.graph.num_edges
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.graph.degrees
+
+    @property
+    def has_weights(self) -> bool:
+        return self.graph.weights is not None
+
+    def ensure_alias(self) -> None:
+        """Ask for alias tables on every materialised block from now on."""
+        self._build_alias = True
 
     # -- paper Table 2 style metadata ---------------------------------------
     def edge_cut(self) -> float:
@@ -244,11 +283,7 @@ class BlockedGraph:
     def activated_load_bytes(self, vertices: np.ndarray) -> int:
         """Bytes moved by an on-demand load of ``vertices`` (index entry pair
         + each vertex's neighbor segment, as in the paper's Fig. 5(b))."""
-        vertices = np.unique(np.asarray(vertices, dtype=np.int64))
-        if vertices.size == 0:
-            return 0
-        deg = self.graph.degrees[vertices].astype(np.int64)
-        return int(8 * vertices.size + 4 * deg.sum())
+        return activated_bytes(self.graph.degrees, vertices)
 
     def describe(self) -> dict:
         return {

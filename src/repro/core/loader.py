@@ -24,9 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Literal, Optional
 
-import numpy as np
 
-from .stats import DevicePreset
 
 __all__ = ["LinearCostModel", "BlockLoadingModel", "LoadDecision"]
 

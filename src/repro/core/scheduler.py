@@ -10,7 +10,7 @@ engine.
 
 from __future__ import annotations
 
-from typing import Iterator, List, Optional, Sequence
+from typing import Iterator, Optional
 
 import numpy as np
 

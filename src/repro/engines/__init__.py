@@ -14,7 +14,7 @@ background prefetch).  ``repro.core.engine`` re-exports everything here for
 backward compatibility.
 """
 
-from .base import EngineBase, WalkResult, _DeviceBlockPair
+from .base import EngineBase, WalkResult, _DeviceBlockPair  # noqa: F401
 from .baselines import PlainBucketEngine, SOGWEngine
 from .biblock import BiBlockEngine
 from .inmemory import InMemoryWalker

@@ -113,12 +113,14 @@ class EngineBase:
         self.pool_flush_walks = pool_flush_walks
         self.seed = task.seed if seed is None else seed
         self.order = task.model.order
-        self.has_alias = bg.graph.weights is not None
+        # backend-neutral surface: works for the in-RAM BlockedGraph and the
+        # file-backed repro.io.DiskBlockedGraph alike
+        self.has_alias = bg.has_weights
         if self.has_alias:
-            bg._build_alias = True
+            bg.ensure_alias()
         self.n_iters = int(np.ceil(np.log2(max(bg.max_block_edges, 2)))) + 2
         self._key = jax.random.PRNGKey(self.seed)
-        V = bg.graph.num_vertices
+        V = bg.num_vertices
         self.endpoint_counts = np.zeros(V, np.int64)
         src = task.initial_walks(V)
         self.num_walks = src.shape[0]
@@ -241,8 +243,15 @@ class EngineBase:
     def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
         raise NotImplementedError
 
+    def close(self) -> None:
+        """Release the storage layer: the prefetch thread and any spill
+        files/temp dirs a disk pool owns.  Engines are single-run objects;
+        ``result()`` calls this, so ``run()`` leaves nothing live behind."""
+        self.blocks.close()
+        self.pool.close()
+
     def result(self) -> WalkResult:
-        return WalkResult(
+        res = WalkResult(
             num_walks=self.num_walks,
             steps_sampled=self.stats.steps_sampled,
             endpoint_counts=self.endpoint_counts,
@@ -250,3 +259,5 @@ class EngineBase:
             stats=self.stats,
             block_store_counters=self.blocks.counters(),
         )
+        self.close()
+        return res

@@ -100,9 +100,9 @@ class SOGWEngine(EngineBase):
     ):
         super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
         self.scheduler = make_scheduler("max_sum", bg.num_blocks, self.seed)
-        self.cached = np.zeros(bg.graph.num_vertices, bool)
+        self.cached = np.zeros(bg.num_vertices, bool)
         if static_cache:
-            deg = bg.graph.degrees.astype(np.int64)
+            deg = bg.degrees.astype(np.int64)
             order = np.argsort(-deg)
             budget = int(bg.block_nedges.max())
             csum = np.cumsum(deg[order])
@@ -147,7 +147,7 @@ class SOGWEngine(EngineBase):
             )
             if needs_io.any():
                 vs = batch.prev[needs_io]
-                deg = self.bg.graph.degrees[vs].astype(np.int64)
+                deg = self.bg.degrees[vs].astype(np.int64)
                 # per-walk light I/O — SOGW does not dedupe across walks
                 self.stats.vertex_load(int(needs_io.sum()), int(8 * needs_io.sum() + 4 * deg.sum()))
             # advance within the single block: resident pair = (b, b)

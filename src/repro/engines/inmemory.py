@@ -24,6 +24,12 @@ class InMemoryWalker:
     engine tests and the corpus generator feeding the LM data pipeline."""
 
     def __init__(self, bg: BlockedGraph, task: WalkTask, *, k_max: int = 16):
+        if not hasattr(bg, "graph"):
+            # e.g. repro.io.DiskBlockedGraph: rebuild the host CSR explicitly
+            raise TypeError(
+                "InMemoryWalker needs the in-RAM BlockedGraph; for a disk "
+                "backend, wrap bg.read_csr() in a BlockedGraph first"
+            )
         self.bg = bg
         self.task = task
         self.k_max = 1 if (isinstance(task.model, Node2vec)

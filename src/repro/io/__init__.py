@@ -1,19 +1,35 @@
-"""Storage/I/O subsystem: walk pools (the "disk" tier for walk state) and the
-block store (resident-block cache + background prefetch).
+"""Storage/I/O subsystem: walk pools (the "disk" tier for walk state), the
+block store (resident-block cache + background prefetch), and the on-disk
+block container (:mod:`repro.io.blockfile`).
 
 Engines in :mod:`repro.engines` persist walks exclusively through a
 :class:`WalkPool` backend and load graph blocks exclusively through a
-:class:`BlockStore`; this package is the seam for sharded pools, async
-bucket pipelines and multi-device walkers.
+:class:`BlockStore`; the store serves either the in-RAM
+:class:`repro.core.graph.BlockedGraph` or the file-backed
+:class:`DiskBlockedGraph`, so this package is the seam for sharded pools,
+async bucket pipelines, multi-device walkers, and graphs larger than host
+memory.
 """
 
+from .blockfile import (
+    BLOCK_FILE_NAME,
+    BlockFileError,
+    DiskBlockedGraph,
+    write_and_open,
+    write_block_file,
+)
 from .blockstore import BlockStore
 from .walkpool import DiskWalkPool, MemoryWalkPool, WalkPool, make_walk_pool
 
 __all__ = [
+    "BLOCK_FILE_NAME",
+    "BlockFileError",
     "BlockStore",
+    "DiskBlockedGraph",
     "DiskWalkPool",
     "MemoryWalkPool",
     "WalkPool",
     "make_walk_pool",
+    "write_and_open",
+    "write_block_file",
 ]

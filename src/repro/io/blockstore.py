@@ -1,9 +1,11 @@
-"""Block store — resident-block cache + background prefetch over BlockedGraph.
+"""Block store — resident-block cache + background prefetch over a graph
+backend (the in-RAM :class:`~repro.core.graph.BlockedGraph` or the
+file-backed :class:`~repro.io.blockfile.DiskBlockedGraph`).
 
 The triangular schedule (§4.2) makes the *next* ancillary block known before
 the current bucket finishes executing, so its materialisation can overlap the
-jitted ``advance_pair`` call.  :class:`BlockStore` wraps
-:meth:`repro.core.graph.BlockedGraph.materialize_block` with
+jitted ``advance_pair`` call.  :class:`BlockStore` wraps the backend's
+``materialize_block`` with
 
 * an LRU cache of materialised :class:`~repro.core.graph.ResidentBlock`\\ s
   (bounded, unlike the unbounded page-cache model inside ``BlockedGraph``);
@@ -27,18 +29,24 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Optional
 
-from repro.core.graph import BlockedGraph, ResidentBlock
+from repro.core.graph import ResidentBlock
 from repro.core.stats import IOStats
 
 __all__ = ["BlockStore"]
 
 
 class BlockStore:
-    """Metered, cached, prefetching access to a graph's blocks."""
+    """Metered, cached, prefetching access to a graph backend's blocks.
+
+    ``bg`` is anything exposing ``materialize_block(b) -> ResidentBlock``
+    plus the blocked-graph metadata surface — for the file-backed
+    :class:`~repro.io.blockfile.DiskBlockedGraph` the LRU + prefetch thread
+    here is what hides real file reads from the critical path.
+    """
 
     def __init__(
         self,
-        bg: BlockedGraph,
+        bg,
         stats: IOStats,
         *,
         capacity: int = 4,

@@ -1,7 +1,8 @@
 """Walk-engine launcher: run a GraSorw task from the command line.
 
     PYTHONPATH=src python -m repro.launch.walk --task rwnv --vertices 5000 \
-        --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25]
+        --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25] \
+        [--graph-backend disk --graph-dir /path/to/dir] [--pool disk]
 
 Prints the paper's headline statistics (block/vertex/on-demand I/Os,
 simulated I/O + exec time) as one CSV row per engine.
@@ -34,6 +35,12 @@ def main():
                     help="walk-pool spill threshold")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable BlockStore background prefetch")
+    ap.add_argument("--graph-backend", default="ram", choices=("ram", "disk"),
+                    help="where graph blocks live: host RAM or the packed "
+                         "on-disk container (repro.io.blockfile)")
+    ap.add_argument("--graph-dir", default=None,
+                    help="directory for the packed block file "
+                         "(disk backend; default: a fresh temp dir)")
     args = ap.parse_args()
 
     from repro.core import (
@@ -50,7 +57,15 @@ def main():
 
     g = erdos_renyi(args.vertices, args.vertices * args.avg_degree // 2,
                     seed=args.seed)
-    bg = partition_into_n_blocks(g, args.blocks)
+    bg_ram = partition_into_n_blocks(g, args.blocks)
+    if args.graph_backend == "disk":
+        from repro.io import write_and_open
+
+        # default scratch dir is removed at exit; an explicit --graph-dir
+        # persists so the container can be reused across runs
+        bg = write_and_open(bg_ram, args.graph_dir)
+    else:
+        bg = bg_ram
     if args.task == "rwnv":
         task = rwnv_task(p=args.p, q=args.q,
                          walks_per_vertex=args.walks_per_vertex,
@@ -77,7 +92,8 @@ def main():
         elif name == "sgsc":
             res = SOGWEngine(bg, task, static_cache=True, **pool_kw).run()
         else:
-            res = InMemoryWalker(bg, task).run(record_walks=False)
+            # the oracle needs the whole CSR in RAM regardless of backend
+            res = InMemoryWalker(bg_ram, task).run(record_walks=False)
         s = res.stats
         hits = (res.block_store_counters or {}).get("prefetch_hits", 0)
         print(f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"

@@ -11,7 +11,6 @@ prefill) plus a growing self-attention cache.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,6 @@ from .attention import (
     attention_apply,
     attention_decode,
     attn_init,
-    init_kv_cache,
 )
 from .common import ModelConfig, dense_init, layer_norm, mlp_apply, mlp_init
 from repro.sharding.context import constrain

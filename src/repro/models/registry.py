@@ -11,10 +11,9 @@ Batch schema (input_specs() in launch/dryrun.py produces exactly these):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from . import encdec, transformer
 from .common import ModelConfig

@@ -14,7 +14,6 @@ The same assembly serves:
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

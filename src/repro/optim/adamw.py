@@ -9,7 +9,7 @@ collective in the optimizer path is the scalar global-norm all-reduce.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

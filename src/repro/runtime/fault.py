@@ -22,7 +22,6 @@ in-process trainer in examples/train_lm_on_walks.py and tests/):
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 import threading
 from pathlib import Path

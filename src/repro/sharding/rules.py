@@ -18,7 +18,7 @@ NamedShardings against whichever mesh is active (1-pod or 2-pod).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import numpy as np

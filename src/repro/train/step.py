@@ -12,8 +12,6 @@ params/opt_state is declared at jit time by the launcher.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

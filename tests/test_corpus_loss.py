@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import reduced_config
-from repro.data import BOS_OFFSET, WalkCorpus, skipgram_pairs
+from repro.data import WalkCorpus, skipgram_pairs
 from repro.optim import OptConfig, adamw_init, adamw_update, lr_schedule
 from repro.train.loss import IGNORE, lm_loss
 

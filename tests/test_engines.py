@@ -12,10 +12,8 @@ import pytest
 from repro.core import (
     BiBlockEngine,
     InMemoryWalker,
-    Node2vec,
     PlainBucketEngine,
     SOGWEngine,
-    WalkTask,
     block_of,
     deepwalk_task,
     partition_into_n_blocks,

@@ -1,11 +1,9 @@
 """CSR graph + blocked storage invariants (unit + hypothesis property)."""
 
 import numpy as np
-import pytest
 from repro.testing import given, settings, st
 
 from repro.core import (
-    BlockedGraph,
     CSRGraph,
     block_of,
     erdos_renyi,

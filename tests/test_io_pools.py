@@ -7,7 +7,6 @@ the spill threshold; a prefetched block is served without a second
 ``block_load`` charge.
 """
 
-import os
 
 import numpy as np
 import pytest
@@ -133,6 +132,32 @@ def test_engine_bitwise_identical_across_backends(small_blocked, Engine, tmp_pat
     assert r_mem.stats.block_ios == r_dsk.stats.block_ios
     # the disk run actually moved real bytes through the pool files
     assert r_dsk.stats.walk_bytes_written > 0
+
+
+@pytest.mark.parametrize("Engine", [BiBlockEngine, PlainBucketEngine, SOGWEngine])
+def test_engine_bitwise_identical_across_full_backend_matrix(
+    small_blocked, Engine, tmp_path
+):
+    """Both storage axes at once: a disk walk pool over a disk graph backend
+    is bit-identical to the all-in-RAM run (walks AND deterministic I/O)."""
+    from repro.io import BLOCK_FILE_NAME, DiskBlockedGraph, write_block_file
+
+    path = str(tmp_path / BLOCK_FILE_NAME)
+    write_block_file(small_blocked, path)
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    r_ram = Engine(small_blocked, task).run()
+    with DiskBlockedGraph(path) as dg:
+        r_all_disk = Engine(
+            dg, task, pool="disk", pool_flush_walks=32,
+            pool_dir=str(tmp_path / Engine.__name__),
+        ).run()
+        np.testing.assert_array_equal(r_ram.endpoint_counts, r_all_disk.endpoint_counts)
+        assert r_ram.stats.block_ios == r_all_disk.stats.block_ios
+        assert r_ram.stats.block_bytes == r_all_disk.stats.block_bytes
+        assert r_ram.stats.ondemand_bytes == r_all_disk.stats.ondemand_bytes
+        # and both kinds of real bytes actually moved
+        assert r_all_disk.stats.walk_bytes_written > 0
+        assert dg.data_bytes_read > 0
 
 
 def test_disk_pool_engine_writes_match_spills(small_blocked, tmp_path):

@@ -7,7 +7,6 @@ import jax.numpy as jnp
 from repro.testing import given, settings, st
 
 from repro.core import erdos_renyi, partition_into_n_blocks
-from repro.core.sampling import build_alias_rows
 from repro.kernels import (
     alias_step,
     bucket_hist_kernel,

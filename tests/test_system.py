@@ -7,7 +7,6 @@ out-of-core engine and the in-memory oracle.
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.configs import reduced_config
 from repro.core import (
