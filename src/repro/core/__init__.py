@@ -22,7 +22,7 @@ from .generators import (
     rmat,
     stochastic_block_model,
 )
-from .graph import BlockedGraph, CSRGraph, ResidentBlock, block_of
+from .graph import BlockedGraph, BlockView, CSRGraph, ResidentBlock, block_of
 from .loader import BlockLoadingModel, LinearCostModel
 from .partition import (
     greedy_locality_partition,
@@ -54,6 +54,7 @@ _LAZY = {
     "PlainBucketEngine": "repro.engines",
     "SOGWEngine": "repro.engines",
     "WalkResult": "repro.engines",
+    "ResidentPair": "repro.engines",
     "advance_pair": "repro.engines",
     "pair_advance_impl": "repro.engines",
     "BlockStore": "repro.io",

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engine import pair_advance_impl
+from repro.engines.step import VID_PAD, remap_search_iters
 from .graph import BlockedGraph
 from .transition import Node2vec, WalkTask
 
@@ -147,13 +148,23 @@ class DistributedWalkEngine:
                 jnp.searchsorted(block_starts, v, side="right") - 1, 0, nb - 1
             ).astype(jnp.int32)
 
+        mv = self.bg.max_block_verts
+        v_iters = remap_search_iters(mv)
+
         def sweep(blocks: BlockShards, prev, cur, hop, alive, key):
-            r = jax.lax.axis_index(baxis)
-            for ax in self.data_axes:
-                key = jax.random.fold_in(key, jax.lax.axis_index(ax))
-            key = jax.random.fold_in(key, r)
+            # walk ids are global: linearise the shard rank over the walk
+            # axes (matching P(walk_axes) layout) — the counter-based RNG
+            # streams are then identical to the single-host engines'
+            r = jnp.zeros((), jnp.int32)
+            for ax in self.walk_axes:
+                r = r * self.mesh.shape[ax] + jax.lax.axis_index(ax)
             own = jax.tree.map(lambda x: x[0], blocks)
             W = prev.shape[0]
+            wid0 = r * W + jnp.arange(W, dtype=jnp.int32)
+
+            def make_vids(start, nv):
+                k = jnp.arange(mv, dtype=jnp.int32)
+                return jnp.where(k < nv, start + k, VID_PAD)
 
             def round_body(t, state):
                 prev, cur, hop, alive, partner, key = state
@@ -175,32 +186,36 @@ class DistributedWalkEngine:
                 routed = want & (slot < capacity)
                 flat = jnp.where(routed, dest * capacity + slot, OOB)
                 payload = jnp.stack(
-                    [prev, cur, hop, alive.astype(jnp.int32)], -1
+                    [prev, cur, hop, alive.astype(jnp.int32), wid0], -1
                 )
-                send = jnp.full((OOB, 4), -1, jnp.int32)
+                send = jnp.full((OOB, 5), -1, jnp.int32)
                 send = send.at[flat].set(payload, mode="drop")
                 recv = jax.lax.all_to_all(
-                    send.reshape(nb, capacity, 4), baxis,
+                    send.reshape(nb, capacity, 5), baxis,
                     split_axis=0, concat_axis=0,
-                ).reshape(OOB, 4)
+                ).reshape(OOB, 5)
                 rmask = recv[:, 0] >= 0
-                # --- advance on the resident pair ---------------------------
-                pair_start = jnp.stack([own.start, partner.start])
-                pair_nverts = jnp.stack([own.nverts, partner.nverts])
-                key, k1 = jax.random.split(key)
+                # --- advance on the resident view pair ----------------------
                 nprev, ncur, nhop, nalive, _, _ = pair_advance_impl(
-                    pair_start, pair_nverts,
-                    jnp.stack([own.indptr, partner.indptr]),
-                    jnp.stack([own.indices, partner.indices]),
-                    jnp.stack([own.alias_j, partner.alias_j]),
-                    jnp.stack([own.alias_q, partner.alias_q]),
+                    jnp.concatenate([make_vids(own.start, own.nverts),
+                                     make_vids(partner.start, partner.nverts)]),
+                    jnp.stack([own.nverts, partner.nverts]),
+                    jnp.array([0, mv], jnp.int32),
+                    jnp.concatenate([own.indptr, partner.indptr]),
+                    jnp.array([0, mv + 1], jnp.int32),
+                    jnp.concatenate([own.indices, partner.indices]),
+                    jnp.array([0, own.indices.shape[0]], jnp.int32),
+                    jnp.concatenate([own.alias_j, partner.alias_j]),
+                    jnp.concatenate([own.alias_q, partner.alias_q]),
+                    jnp.where(rmask, recv[:, 4], 0),
                     recv[:, 0], recv[:, 1], recv[:, 2],
-                    (recv[:, 3] > 0) & rmask, k1,
+                    (recv[:, 3] > 0) & rmask, key,
                     jnp.int32(length), jnp.float32(task.decay),
                     jnp.float32(getattr(task.model, "p", 1.0)),
                     jnp.float32(getattr(task.model, "q", 1.0)),
                     order=task.model.order, k_max=k_max, n_iters=n_iters,
-                    record=False, has_alias=has_alias, max_len=length,
+                    v_iters=v_iters, record=False, has_alias=has_alias,
+                    max_len=length,
                 )
                 # --- send results back to the origin shard ------------------
                 back = jnp.stack([nprev, ncur, nhop, nalive.astype(jnp.int32)], -1)
@@ -265,13 +280,15 @@ class DistributedWalkEngine:
         alive = jax.device_put(
             jnp.asarray(np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])), wsh
         )
+        # counter-based RNG: the base key is fixed; draws are keyed per
+        # (walk id, hop) inside the kernel, so walks are bit-identical to
+        # the single-host engines' for the same task seed
         key = jax.random.PRNGKey(task.seed)
 
         sweeps = 0
         limit = max_sweeps if max_sweeps is not None else task.length + 8
         while sweeps < limit:
-            key, k1 = jax.random.split(key)
-            prev, cur, hop, alive = sweep_fn(self._blocks, prev, cur, hop, alive, k1)
+            prev, cur, hop, alive = sweep_fn(self._blocks, prev, cur, hop, alive, key)
             sweeps += 1
             if not bool(jnp.any(alive)):
                 break

@@ -17,6 +17,7 @@ from repro.engines import (  # noqa: F401
     EngineBase,
     InMemoryWalker,
     PlainBucketEngine,
+    ResidentPair,
     SOGWEngine,
     WalkResult,
     _DeviceBlockPair,
@@ -32,6 +33,7 @@ __all__ = [
     "BiBlockEngine",
     "EngineBase",
     "PlainBucketEngine",
+    "ResidentPair",
     "SOGWEngine",
     "InMemoryWalker",
     "advance_pair",

@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "CSRGraph",
     "BlockedGraph",
+    "BlockView",
     "ResidentBlock",
     "block_of",
     "activated_bytes",
@@ -127,8 +128,11 @@ class CSRGraph:
         src = np.repeat(np.arange(self.num_vertices), self.degrees.astype(np.int64))
         edges = np.stack([perm[src], perm[self.indices]], axis=1)
         return CSRGraph.from_edges(
-            edges, self.num_vertices, symmetrize=False,
-            weights=self.weights, dedup=False,
+            edges,
+            self.num_vertices,
+            symmetrize=False,
+            weights=self.weights,
+            dedup=False,
         )
 
 
@@ -171,6 +175,142 @@ class ResidentBlock:
     def nbytes_full(self) -> int:
         """Bytes a full load moves: index slice + CSR slice (4-byte cells)."""
         return 4 * (self.nverts + 1) + 4 * self.nedges
+
+
+@dataclasses.dataclass
+class BlockView:
+    """A (possibly partial) *view* of one block — the currency between the
+    storage layer and execution.
+
+    A view is a compacted local CSR over the vertices it holds: ``vids`` is
+    the sorted array of global vertex ids with a row in the view (the remap
+    table — the kernel resolves a global vertex to its compact row by binary
+    search over ``vids``), ``indptr``/``indices`` the compact CSR.  Two kinds:
+
+    * ``kind == "full"`` — every vertex of the block; ``vids`` is the
+      contiguous range ``[start, start + nverts)``.  Built from a
+      :class:`ResidentBlock` (a full block load).
+    * ``kind == "activated"`` — only the bucket's activated vertices (the
+      ``prev``/``cur`` of some walk), so device bytes are
+      ``O(activated vertices)`` instead of ``O(block)``.  Built by
+      ``partial_view`` on either graph backend, and *extended* mid-advance
+      when a walk reaches a vertex that was not pre-activated.
+
+    Rows a view holds are bit-identical to the full block's rows (same
+    neighbor order, same row-local alias tables), which is what makes
+    execution on an activated view produce the same walks as a full load.
+    """
+
+    block_id: int
+    kind: str  # "full" | "activated"
+    vids: np.ndarray  # [K] int32, sorted global vertex ids (the remap table)
+    indptr: np.ndarray  # [K+1] int32, compact local offsets
+    indices: np.ndarray  # [nnz] int32, global neighbor ids (sorted per row)
+    alias_j: Optional[np.ndarray] = None  # [nnz] int32, row-local alias slots
+    alias_q: Optional[np.ndarray] = None  # [nnz] float32
+
+    @property
+    def nverts(self) -> int:
+        return int(self.vids.shape[0])
+
+    @property
+    def nedges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def nbytes(self) -> int:
+        """Data bytes of the compact view (remap + index + CSR, 4-byte cells,
+        plus the alias pair when present)."""
+        n = 4 * self.nverts + 4 * (self.nverts + 1) + 4 * self.nedges
+        if self.alias_j is not None:
+            n += 8 * self.nedges
+        return n
+
+    def has_vertices(self, vertices: np.ndarray) -> np.ndarray:
+        """Boolean mask: which of ``vertices`` have a row in this view."""
+        vertices = np.asarray(vertices)
+        pos = np.searchsorted(self.vids, vertices)
+        pos_c = np.minimum(pos, max(self.nverts - 1, 0))
+        if self.nverts == 0:
+            return np.zeros(vertices.shape, bool)
+        return self.vids[pos_c] == vertices
+
+    @classmethod
+    def from_resident(cls, blk: ResidentBlock) -> "BlockView":
+        """Full view of a materialised block (zero-copy slices)."""
+        nv, ne = blk.nverts, blk.nedges
+        return cls(
+            block_id=blk.block_id,
+            kind="full",
+            vids=(blk.start + np.arange(nv)).astype(np.int32),
+            indptr=blk.indptr[: nv + 1],
+            indices=blk.indices[:ne],
+            alias_j=None if blk.alias_j is None else blk.alias_j[:ne],
+            alias_q=None if blk.alias_q is None else blk.alias_q[:ne],
+        )
+
+    @classmethod
+    def from_rows(
+        cls,
+        block_id: int,
+        vids: np.ndarray,
+        segs: Sequence[np.ndarray],
+        alias_segs: Optional[Sequence] = None,
+        *,
+        kind: str = "activated",
+    ) -> "BlockView":
+        """Assemble a view from per-vertex row segments (``vids`` sorted,
+        ``segs[k]`` the neighbor list of ``vids[k]``)."""
+        k = len(segs)
+        indptr = np.zeros(k + 1, dtype=np.int32)
+        if k:
+            sizes = np.array([s.size for s in segs], dtype=np.int64)
+            indptr[1:] = np.cumsum(sizes).astype(np.int32)
+        indices = np.concatenate(segs).astype(np.int32) if k else np.zeros(0, np.int32)
+        alias_j = alias_q = None
+        if alias_segs is not None:
+            alias_j = (
+                np.concatenate([a for a, _ in alias_segs]).astype(np.int32)
+                if k
+                else np.zeros(0, np.int32)
+            )
+            alias_q = (
+                np.concatenate([q for _, q in alias_segs]).astype(np.float32)
+                if k
+                else np.zeros(0, np.float32)
+            )
+        return cls(
+            block_id=block_id,
+            kind=kind,
+            vids=np.asarray(vids, dtype=np.int32),
+            indptr=indptr,
+            indices=indices,
+            alias_j=alias_j,
+            alias_q=alias_q,
+        )
+
+    def row(self, k: int) -> np.ndarray:
+        return self.indices[self.indptr[k] : self.indptr[k + 1]]
+
+    def _alias_row(self, k: int):
+        s, e = self.indptr[k], self.indptr[k + 1]
+        return (self.alias_j[s:e], self.alias_q[s:e])
+
+    def extended(self, other: "BlockView") -> "BlockView":
+        """A new activated view holding this view's rows plus ``other``'s
+        (the mid-advance *extension gather*: ``other`` carries the rows of
+        vertices reached during execution that were not pre-activated).
+        Vertex sets must be disjoint."""
+        if other.block_id != self.block_id:
+            raise ValueError("cannot extend a view with rows of another block")
+        merged = np.concatenate([self.vids, other.vids])
+        order = np.argsort(merged, kind="stable")
+        views = [self] * self.nverts + [other] * other.nverts
+        local = list(range(self.nverts)) + list(range(other.nverts))
+        segs = [views[i].row(local[i]) for i in order]
+        alias_segs = None
+        if self.alias_j is not None:
+            alias_segs = [views[i]._alias_row(local[i]) for i in order]
+        return BlockView.from_rows(self.block_id, merged[order], segs, alias_segs, kind="activated")
 
 
 class BlockedGraph:
@@ -228,9 +368,7 @@ class BlockedGraph:
     # -- paper Table 2 style metadata ---------------------------------------
     def edge_cut(self) -> float:
         """Fraction of edges whose endpoints live in different blocks."""
-        src = np.repeat(
-            np.arange(self.graph.num_vertices), self.graph.degrees.astype(np.int64)
-        )
+        src = np.repeat(np.arange(self.graph.num_vertices), self.graph.degrees.astype(np.int64))
         bs = block_of(self.block_starts, src)
         bd = block_of(self.block_starts, self.graph.indices)
         if len(bs) == 0:
@@ -276,14 +414,55 @@ class BlockedGraph:
             es = int(self.graph.indptr[s])
             w = np.zeros(self.max_block_edges, dtype=np.float32)
             w[: blk.nedges] = self.graph.weights[es : es + blk.nedges]
-        blk.alias_j, blk.alias_q = build_alias_rows(
-            blk.indptr, blk.nverts, self.max_block_edges, w
-        )
+        blk.alias_j, blk.alias_q = build_alias_rows(blk.indptr, blk.nverts, self.max_block_edges, w)
 
     def activated_load_bytes(self, vertices: np.ndarray) -> int:
         """Bytes moved by an on-demand load of ``vertices`` (index entry pair
         + each vertex's neighbor segment, as in the paper's Fig. 5(b))."""
         return activated_bytes(self.graph.degrees, vertices)
+
+    def partial_view(self, b: int, vertices: np.ndarray) -> BlockView:
+        """An *activated* :class:`BlockView` of block ``b``: a compacted
+        local CSR over only the (unique) requested vertices plus the remap
+        table.  Rows are cut straight from the host CSR; row-local alias
+        tables are built with the same builder a full block uses, so a row
+        is bit-identical to its full-load twin.  Mirrors
+        ``DiskBlockedGraph.partial_view`` (which performs real partial
+        reads); the *engine* charges the transfer either way.
+        """
+        s, e = int(self.block_starts[b]), int(self.block_starts[b + 1])
+        vids = np.unique(np.asarray(vertices, dtype=np.int64))
+        if vids.size and (vids[0] < s or vids[-1] >= e):
+            raise IndexError(f"vertices outside block {b} range [{s}, {e})")
+        return self._rows_view(b, vids)
+
+    def gather_view(self, vertices: np.ndarray) -> BlockView:
+        """A cross-block activated view (``block_id == -1``): the rows of
+        arbitrary vertices, compacted.  What a baseline's per-walk vertex
+        fetches pin in "memory" (e.g. SOGW's out-of-block previous-vertex
+        adjacencies), so execution uses exactly the rows the engine charged
+        for."""
+        return self._rows_view(-1, np.unique(np.asarray(vertices, dtype=np.int64)))
+
+    def _rows_view(self, block_id: int, vids: np.ndarray) -> BlockView:
+        g = self.graph
+        segs = [g.indices[g.indptr[v] : g.indptr[v + 1]] for v in vids]
+        alias_segs = None
+        if self._build_alias:
+            from .sampling import build_alias  # local import: avoid cycle
+
+            alias_segs = []
+            for k, v in enumerate(vids):
+                w = (
+                    g.weights[g.indptr[v] : g.indptr[v + 1]]
+                    if g.weights is not None
+                    else np.ones(segs[k].size)
+                )
+                if segs[k].size:
+                    alias_segs.append(build_alias(w))
+                else:
+                    alias_segs.append((np.zeros(0, np.int32), np.zeros(0, np.float32)))
+        return BlockView.from_rows(block_id, vids, segs, alias_segs)
 
     def describe(self) -> dict:
         return {

@@ -24,8 +24,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Literal, Optional
 
-
-
 __all__ = ["LinearCostModel", "BlockLoadingModel", "LoadDecision"]
 
 LoadDecision = Literal["full", "ondemand"]

@@ -58,6 +58,7 @@ class IOStats:
         self.walk_bytes_read = 0
         self.ondemand_ios = 0
         self.ondemand_bytes = 0
+        self.peak_resident_bytes = 0
         self.time_slots = 0
         self.supersteps = 0
         self.steps_sampled = 0
@@ -89,6 +90,12 @@ class IOStats:
         self.ondemand_ios += n_vertices
         self.ondemand_bytes += nbytes
         self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
+
+    def note_resident(self, nbytes: int) -> None:
+        """Gauge: bytes of graph data resident in "memory" (the device view
+        pair) right now.  ``peak_resident_bytes`` is the high-water mark —
+        the footprint on-demand *execution* shrinks versus full loads."""
+        self.peak_resident_bytes = max(self.peak_resident_bytes, int(nbytes))
 
     def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16,
                 kind: str = "write") -> None:
@@ -133,6 +140,7 @@ class IOStats:
             "walk_bytes": self.walk_bytes,
             "walk_bytes_written": self.walk_bytes_written,
             "walk_bytes_read": self.walk_bytes_read,
+            "peak_resident_bytes": self.peak_resident_bytes,
             "time_slots": self.time_slots,
             "supersteps": self.supersteps,
             "steps_sampled": self.steps_sampled,

@@ -14,7 +14,7 @@ background prefetch).  ``repro.core.engine`` re-exports everything here for
 backward compatibility.
 """
 
-from .base import EngineBase, WalkResult, _DeviceBlockPair  # noqa: F401
+from .base import EngineBase, ResidentPair, WalkResult, _DeviceBlockPair  # noqa: F401
 from .baselines import PlainBucketEngine, SOGWEngine
 from .biblock import BiBlockEngine
 from .inmemory import InMemoryWalker
@@ -22,6 +22,7 @@ from .step import advance_pair, pair_advance_impl, pow2_pad
 
 __all__ = [
     "EngineBase",
+    "ResidentPair",
     "WalkResult",
     "BiBlockEngine",
     "PlainBucketEngine",

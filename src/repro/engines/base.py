@@ -1,4 +1,4 @@
-"""Shared engine plumbing: device block pair, walk pools, stats, advance.
+"""Shared engine plumbing: resident view pair, walk pools, stats, advance.
 
 Every out-of-core engine owns
 
@@ -6,9 +6,13 @@ Every out-of-core engine owns
   slow tier holding partially-finished walks between time slots; engines
   persist *exclusively* through it;
 * a :class:`repro.io.BlockStore` — metered, cached, prefetching access to
-  graph blocks; engines load *exclusively* through it;
-* a :class:`_DeviceBlockPair` — the two resident block slots as stacked
-  device arrays (the "memory" tier of the paper).
+  graph block *views*; engines load *exclusively* through it;
+* a :class:`ResidentPair` — the two resident slots as packed device arrays
+  (the "memory" tier of the paper).  Each slot holds a
+  :class:`~repro.core.graph.BlockView` — a full block or a compacted
+  *activated* view — so heterogeneously-sized views stack without padding
+  one to the other's shape; per-slot sizes are pow2-bucketed to bound jit
+  recompiles.
 """
 
 from __future__ import annotations
@@ -22,15 +26,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import BlockedGraph, ResidentBlock, block_of
+from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.stats import SSD, DevicePreset, IOStats
 from repro.core.transition import Node2vec, WalkTask
 from repro.core.walk import WalkBatch
 from repro.io import BlockStore, WalkPool, make_walk_pool
 
-from .step import advance_pair, pow2_pad
+from .step import VID_PAD, advance_pair, pow2_pad, remap_search_iters
 
-__all__ = ["WalkResult", "EngineBase", "_DeviceBlockPair"]
+__all__ = ["WalkResult", "EngineBase", "ResidentPair"]
 
 
 @dataclasses.dataclass
@@ -50,43 +54,134 @@ class WalkResult:
         return self.endpoint_counts / tot
 
 
-class _DeviceBlockPair:
-    """Two resident block slots as stacked device arrays ("memory")."""
+class ResidentPair:
+    """Two resident view slots packed into flat ragged device arrays.
 
-    def __init__(self, bg: BlockedGraph, has_alias: bool):
+    Unlike the fixed-shape block pair it replaces, each slot is padded to
+    its *own* pow2-bucketed capacity, so an activated view costs
+    ``O(activated vertices)`` device bytes next to a full block instead of
+    being padded to the block maxima.  When both slots hold the same view
+    (initialization, single-block engines) the segment is stored once and
+    both slots alias it.
+    """
+
+    #: pow2 floor for activated-view capacities (vertices, edges)
+    V_FLOOR = 64
+    E_FLOOR = 256
+
+    def __init__(self, bg: BlockedGraph, has_alias: bool, stats: Optional[IOStats] = None):
         self.bg = bg
         self.has_alias = has_alias
-        shape_ip = (2, bg.max_block_verts + 1)
-        shape_ix = (2, bg.max_block_edges)
-        self.start = np.zeros(2, np.int32)
-        self.nverts = np.zeros(2, np.int32)
-        self.indptr = np.zeros(shape_ip, np.int32)
-        self.indices = np.full(shape_ix, -1, np.int32)
-        self.alias_j = np.zeros(shape_ix, np.int32)
-        self.alias_q = np.ones(shape_ix, np.float32)
+        self.stats = stats
+        self.views: list[Optional[BlockView]] = [None, None]
+        # pack-once-per-slot-change: packed segment + caps, keyed by the view
+        # object resident in the slot (views are immutable once built)
+        self._packed: list = [None, None]
 
-    def set_slot(self, s: int, blk: ResidentBlock) -> None:
-        self.start[s] = blk.start
-        self.nverts[s] = blk.nverts
-        self.indptr[s] = blk.indptr
-        self.indices[s] = blk.indices
-        if self.has_alias and blk.alias_j is not None:
-            self.alias_j[s] = blk.alias_j
-            self.alias_q[s] = blk.alias_q
+    def set_slot(self, s: int, view: BlockView) -> None:
+        if self.views[s] is not view:
+            self._packed[s] = None
+        self.views[s] = view
+
+    def _packed_segment(self, s: int):
+        view = self.views[s]
+        if self._packed[s] is None:
+            vc, ec = self._caps(view)
+            self._packed[s] = (self._pack_segment(view, vc, ec, self.has_alias), vc, ec)
+        return self._packed[s]
+
+    # -- packing --------------------------------------------------------------
+    def _caps(self, view: BlockView) -> Tuple[int, int]:
+        """Padded (vertex, edge) capacity for one view.  Full views always
+        pad to the graph maxima (one stable shape); activated views to a
+        pow2 bucket of their own size."""
+        if view.kind == "full":
+            return self.bg.max_block_verts, self.bg.max_block_edges
+        vc = min(pow2_pad(view.nverts, self.V_FLOOR), self.bg.max_block_verts)
+        ec = min(pow2_pad(view.nedges, self.E_FLOOR), self.bg.max_block_edges)
+        return max(vc, view.nverts), max(ec, view.nedges)
+
+    @staticmethod
+    def _pack_segment(view: BlockView, vc: int, ec: int, has_alias: bool):
+        vids = np.full(vc, VID_PAD, np.int32)
+        vids[: view.nverts] = view.vids
+        indptr = np.full(vc + 1, view.nedges, np.int32)
+        indptr[: view.nverts + 1] = view.indptr
+        indices = np.full(ec, -1, np.int32)
+        indices[: view.nedges] = view.indices
+        if has_alias:
+            aj = np.zeros(ec, np.int32)
+            aq = np.ones(ec, np.float32)
+            if view.alias_j is not None:
+                aj[: view.nedges] = view.alias_j
+                aq[: view.nedges] = view.alias_q
+        else:
+            aj = np.zeros(1, np.int32)
+            aq = np.ones(1, np.float32)
+        return vids, indptr, indices, aj, aq
 
     def device_args(self):
-        return (
-            jnp.asarray(self.start),
-            jnp.asarray(self.nverts),
-            jnp.asarray(self.indptr),
-            jnp.asarray(self.indices),
-            jnp.asarray(self.alias_j),
-            jnp.asarray(self.alias_q),
+        """Pack both slots into the kernel's flat ragged arrays.  Returns
+        ``(args, v_iters)`` — ``v_iters`` is the static binary-search depth
+        for the remap lookup at this padded size."""
+        v0, v1 = self.views
+        dedupe = v1 is v0
+        slots = [0] if dedupe else [0, 1]
+        segs = []
+        packed = []
+        for s in slots:
+            p, vc, ec = self._packed_segment(s)
+            segs.append((self.views[s], vc, ec))
+            packed.append(p)
+        vids = np.concatenate([p[0] for p in packed])
+        indptr = np.concatenate([p[1] for p in packed])
+        indices = np.concatenate([p[2] for p in packed])
+        if self.has_alias:
+            alias_j = np.concatenate([p[3] for p in packed])
+            alias_q = np.concatenate([p[4] for p in packed])
+        else:
+            alias_j = np.zeros(1, np.int32)
+            alias_q = np.ones(1, np.float32)
+        vc0 = segs[0][1]
+        ec0 = segs[0][2]
+        if dedupe:
+            nverts = np.array([v0.nverts, v0.nverts], np.int32)
+            vid_base = np.array([0, 0], np.int32)
+            ptr_base = np.array([0, 0], np.int32)
+            ind_base = np.array([0, 0], np.int32)
+        else:
+            nverts = np.array([v0.nverts, v1.nverts], np.int32)
+            vid_base = np.array([0, vc0], np.int32)
+            ptr_base = np.array([0, vc0 + 1], np.int32)
+            ind_base = np.array([0, ec0], np.int32)
+        if self.stats is not None:
+            nbytes = 4 * (vids.size + indptr.size + indices.size)
+            if self.has_alias:
+                nbytes += 8 * indices.size
+            self.stats.note_resident(nbytes)
+        max_cap = max(vc for _, vc, _ in segs)
+        v_iters = remap_search_iters(max_cap)
+        args = (
+            jnp.asarray(vids),
+            jnp.asarray(nverts),
+            jnp.asarray(vid_base),
+            jnp.asarray(indptr),
+            jnp.asarray(ptr_base),
+            jnp.asarray(indices),
+            jnp.asarray(ind_base),
+            jnp.asarray(alias_j),
+            jnp.asarray(alias_q),
         )
+        return args, v_iters
 
 
 class EngineBase:
-    """Common state: walk pool ("disk"), block store, stats, bookkeeping."""
+    """Common state: walk pool ("disk"), block store, stats, bookkeeping.
+
+    Engines are single-run objects and context managers: ``run()`` closes
+    the storage layer on any exit (including a raise), ``close()`` is
+    idempotent, and ``with Engine(...) as eng: eng.run()`` works too.
+    """
 
     def __init__(
         self,
@@ -119,7 +214,9 @@ class EngineBase:
         if self.has_alias:
             bg.ensure_alias()
         self.n_iters = int(np.ceil(np.log2(max(bg.max_block_edges, 2)))) + 2
-        self._key = jax.random.PRNGKey(self.seed)
+        # counter-based RNG: one fixed base key; draws are keyed per
+        # (walk id, hop), never per call — see repro.engines.step
+        self._base_key = jax.random.PRNGKey(self.seed)
         V = bg.num_vertices
         self.endpoint_counts = np.zeros(V, np.int64)
         src = task.initial_walks(V)
@@ -140,11 +237,16 @@ class EngineBase:
             flush_walks=pool_flush_walks,
             directory=pool_dir,
         )
-        self.blocks = BlockStore(bg, self.stats, enable_prefetch=prefetch,
-                                 capacity=max(block_cache_blocks, 2))
+        self.blocks = BlockStore(
+            bg,
+            self.stats,
+            enable_prefetch=prefetch,
+            capacity=max(block_cache_blocks, 2),
+        )
         self._pending_init_src = src
         self.unfinished = self.num_walks
-        self.pair = _DeviceBlockPair(bg, self.has_alias)
+        self.pair = ResidentPair(bg, self.has_alias, self.stats)
+        self._closed = False
 
     # -- pool plumbing ("disk" walk I/O) --------------------------------------
     @property
@@ -155,12 +257,13 @@ class EngineBase:
     def pool_min_hop(self) -> np.ndarray:
         return self.pool.min_hop
 
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
     # -- termination bookkeeping ----------------------------------------------
-    def _retire(self, batch: WalkBatch, wid: np.ndarray, alive: np.ndarray) -> Tuple[WalkBatch, np.ndarray]:
+    def _retire(
+        self,
+        batch: WalkBatch,
+        wid: np.ndarray,
+        alive: np.ndarray,
+    ) -> Tuple[WalkBatch, np.ndarray]:
         done = ~alive
         if done.any():
             ends = batch.cur[done]
@@ -179,32 +282,43 @@ class EngineBase:
             self.corpus[wid[m], h] = col[m]
 
     # -- the jitted advance wrapper --------------------------------------------
-    def _advance(self, batch: WalkBatch, wid: np.ndarray):
-        """Run advance_pair on the resident pair; returns updated host batch."""
+    def _advance(self, batch: WalkBatch, wid: np.ndarray, alive: Optional[np.ndarray] = None):
+        """Run advance_pair on the resident view pair; returns the updated
+        host batch and alive mask.  ``alive`` masks walks already retired in
+        a previous round of the same bucket (mid-advance extensions)."""
         n = len(batch)
         N = pow2_pad(n)
         pad = N - n
 
         def pad32(x, fill):
-            return jnp.asarray(
-                np.concatenate([x.astype(np.int32), np.full(pad, fill, np.int32)])
-            )
+            return jnp.asarray(np.concatenate([x.astype(np.int32), np.full(pad, fill, np.int32)]))
 
         prev = pad32(batch.prev, 0)
         cur = pad32(batch.cur, 0)
         hop = pad32(batch.hop, 0)
-        alive = jnp.asarray(
-            np.concatenate([np.ones(n, bool), np.zeros(pad, bool)])
-        )
+        wid_dev = pad32(wid, 0)
+        alive_host = np.ones(n, bool) if alive is None else alive
+        alive_dev = jnp.asarray(np.concatenate([alive_host, np.zeros(pad, bool)]))
+        pair_args, v_iters = self.pair.device_args()
         t0 = time.perf_counter()
         out = advance_pair(
-            *self.pair.device_args(),
-            prev, cur, hop, alive, self._next_key(),
-            jnp.int32(self.task.length), jnp.float32(self.task.decay),
+            *pair_args,
+            wid_dev,
+            prev,
+            cur,
+            hop,
+            alive_dev,
+            self._base_key,
+            jnp.int32(self.task.length),
+            jnp.float32(self.task.decay),
             jnp.float32(getattr(self.task.model, "p", 1.0)),
             jnp.float32(getattr(self.task.model, "q", 1.0)),
-            order=self.order, k_max=self.k_max, n_iters=self.n_iters,
-            record=self.record_walks, has_alias=self.has_alias,
+            order=self.order,
+            k_max=self.k_max,
+            n_iters=self.n_iters,
+            v_iters=v_iters,
+            record=self.record_walks,
+            has_alias=self.has_alias,
             max_len=int(self.task.length),
         )
         prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
@@ -228,11 +342,11 @@ class EngineBase:
         src_blocks = block_of(self.bg.block_starts, src)
         uniq = np.unique(src_blocks)
         for k, b in enumerate(uniq):
-            blk = self.blocks.get(int(b), sequential=True)
+            view = self.blocks.get_view(int(b), sequential=True)
             if k + 1 < len(uniq):
                 self.blocks.prefetch(int(uniq[k + 1]))
-            self.pair.set_slot(0, blk)
-            self.pair.set_slot(1, blk)
+            self.pair.set_slot(0, view)
+            self.pair.set_slot(1, view)
             m = src_blocks == b
             batch = WalkBatch(src[m], src[m], src[m], np.zeros(m.sum(), np.int32))
             wid = wid_all[m]
@@ -243,21 +357,50 @@ class EngineBase:
     def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
         raise NotImplementedError
 
+    def _run(self) -> WalkResult:
+        raise NotImplementedError
+
+    def run(self) -> WalkResult:
+        """Execute the task.  The storage layer (prefetch thread, disk-pool
+        spill dirs) is released on *any* exit — including the
+        convergence-guard ``RuntimeError`` — so a failed run leaks nothing."""
+        try:
+            return self._run()
+        finally:
+            self.close()
+
     def close(self) -> None:
         """Release the storage layer: the prefetch thread and any spill
-        files/temp dirs a disk pool owns.  Engines are single-run objects;
-        ``result()`` calls this, so ``run()`` leaves nothing live behind."""
+        files/temp dirs a disk pool owns.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
         self.blocks.close()
         self.pool.close()
 
-    def result(self) -> WalkResult:
+    def __enter__(self) -> "EngineBase":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def result(self, *, loader_summary: Optional[dict] = None) -> WalkResult:
+        """Assemble the :class:`WalkResult` and close the engine.  Every
+        engine reports ``loader_summary`` uniformly — baselines (and any
+        engine without a learning-based loader) report ``None``."""
         res = WalkResult(
             num_walks=self.num_walks,
             steps_sampled=self.stats.steps_sampled,
             endpoint_counts=self.endpoint_counts,
             corpus=self.corpus,
             stats=self.stats,
+            loader_summary=loader_summary,
             block_store_counters=self.blocks.counters(),
         )
         self.close()
         return res
+
+
+#: backward-compatible alias — the fixed-shape block pair became the
+#: view-stacking ResidentPair
+_DeviceBlockPair = ResidentPair

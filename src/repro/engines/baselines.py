@@ -27,8 +27,15 @@ class PlainBucketEngine(EngineBase):
     """§7.3 baseline: traditional walk storage (B(cur)), state-aware current
     scheduling (GraphWalker's max-sum), ancillary sweep b0..b_{N_B-1}."""
 
-    def __init__(self, bg: BlockedGraph, task: WalkTask, *, preset: DevicePreset = SSD,
-                 record_walks: bool = False, **kw):
+    def __init__(
+        self,
+        bg: BlockedGraph,
+        task: WalkTask,
+        *,
+        preset: DevicePreset = SSD,
+        record_walks: bool = False,
+        **kw,
+    ):
         super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
         self.scheduler = make_scheduler("max_sum", bg.num_blocks, self.seed)
 
@@ -40,7 +47,7 @@ class PlainBucketEngine(EngineBase):
             m = assoc == b
             self.pool.push(int(b), batch.select(m), wid[m])
 
-    def run(self) -> WalkResult:
+    def _run(self) -> WalkResult:
         self._initialize()
         guard = 0
         while self.unfinished > 0:
@@ -57,8 +64,7 @@ class PlainBucketEngine(EngineBase):
             self.stats.supersteps += 1
             # state-aware scheduling jumps around: current block load is a
             # random block I/O (the paper's point about sequential wins)
-            blk_b = self.blocks.get(b, sequential=False)
-            self.pair.set_slot(0, blk_b)
+            self.pair.set_slot(0, self.blocks.get_view(b, sequential=False))
             # walks live with B(cur); bucket key = B(prev) (plain bucketing)
             pre_blk = block_of(self.bg.block_starts, batch.prev)
             for i in range(self.bg.num_blocks):
@@ -75,7 +81,7 @@ class PlainBucketEngine(EngineBase):
                 if nxt is not None:
                     self.blocks.prefetch(nxt)
                 seq = i == b + 1  # only the successor read is sequential
-                self.pair.set_slot(1, self.blocks.get(i, sequential=seq))
+                self.pair.set_slot(1, self.blocks.get_view(i, sequential=seq))
                 bucket, alive = self._advance(bucket, bwid)
                 bucket, bwid = self._retire(bucket, bwid, alive)
                 self._persist(bucket, bwid)
@@ -120,7 +126,7 @@ class SOGWEngine(EngineBase):
             m = assoc == b
             self.pool.push(int(b), batch.select(m), wid[m])
 
-    def run(self) -> WalkResult:
+    def _run(self) -> WalkResult:
         self._initialize()
         guard = 0
         while self.unfinished > 0:
@@ -135,24 +141,31 @@ class SOGWEngine(EngineBase):
                 continue
             self.stats.time_slots += 1
             self.stats.supersteps += 1
-            blk_b = self.blocks.get(b, sequential=False)
+            view_b = self.blocks.get_view(b, sequential=False)
             # vertex I/Os: SECOND-order walks must fetch the stored previous
             # vertex's adjacency when it lies outside the current block
             # (first-order models never touch prev — paper Fig. 1a)
             pre_blk = block_of(self.bg.block_starts, batch.prev)
-            needs_io = (
-                (pre_blk != b) & (batch.hop > 0) & ~self.cached[batch.prev]
+            outside = (
+                (pre_blk != b) & (batch.hop > 0)
                 if self.order == 2
                 else np.zeros(len(batch), bool)
             )
+            needs_io = outside & ~self.cached[batch.prev]
             if needs_io.any():
                 vs = batch.prev[needs_io]
                 deg = self.bg.degrees[vs].astype(np.int64)
                 # per-walk light I/O — SOGW does not dedupe across walks
                 self.stats.vertex_load(int(needs_io.sum()), int(8 * needs_io.sum() + 4 * deg.sum()))
-            # advance within the single block: resident pair = (b, b)
-            self.pair.set_slot(0, blk_b)
-            self.pair.set_slot(1, blk_b)
+            # the fetched (or cached) out-of-block prev adjacencies become a
+            # gathered view in slot 1, so the rejection test probes the true
+            # rows the engine just paid for — the walks are exactly the
+            # oracle's, not an approximation
+            self.pair.set_slot(0, view_b)
+            if outside.any():
+                self.pair.set_slot(1, self.blocks.gather_view(np.unique(batch.prev[outside])))
+            else:
+                self.pair.set_slot(1, view_b)
             batch, alive = self._advance(batch, wid)
             batch, wid = self._retire(batch, wid, alive)
             self._persist(batch, wid)

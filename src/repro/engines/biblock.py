@@ -2,19 +2,27 @@
 
 Triangular bi-block scheduling (§4.2), skewed walk storage + bucket
 management (§4.3), bucket-extending (Alg. 2), learning-based block loading
-(§5).  Blocks come in through the :class:`repro.io.BlockStore` — the
-triangular schedule knows the next ancillary block before the current bucket
-finishes, so the store prefetches it under the jitted advance call.
+(§5).  Block *views* come in through the :class:`repro.io.BlockStore`: a
+full-load decision materialises the whole ancillary block, an on-demand
+decision builds a compacted *activated* :class:`~repro.core.graph.BlockView`
+over only the bucket's prev/cur vertices — and execution runs on that view,
+so the device footprint of an on-demand bucket is ``O(activated vertices)``
+(``IOStats.peak_resident_bytes`` is the gauge).  Walks that reach a
+non-activated vertex mid-advance pause; their rows are gathered and
+*appended* to the view (never a re-materialisation) and the advance
+resumes.  The triangular schedule knows the next ancillary bucket before
+the current one finishes, so the store prefetches its view — full or
+partial — under the jitted advance call.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core.buckets import split_into_buckets
-from repro.core.graph import BlockedGraph, block_of
+from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.loader import BlockLoadingModel
 from repro.core.stats import SSD, DevicePreset
 from repro.core.transition import WalkTask
@@ -62,47 +70,91 @@ class BiBlockEngine(EngineBase):
     #: modelled in-memory cost per sampled step (feeds the LR exec component)
     STEP_COST = 2.0e-8
 
-    def _load_ancillary(self, i: int, n_bucket_walks: int, activated: np.ndarray):
-        """Load block i with the learned method; meter; return (decision,
-        eta, load_cost) — execution cost is added before feeding the model
-        (the paper's t_f / t_o cover loading *and* executing, §5.2.1)."""
-        blk = self.blocks.get(i, charge=False)
+    @staticmethod
+    def _bucket_activated(bucket: WalkBatch, s: int, e: int) -> np.ndarray:
+        """Activated vertices of a bucket within block range [s, e)."""
+        act = np.concatenate([bucket.prev, bucket.cur])
+        return act[(act >= s) & (act < e)]
+
+    def _load_ancillary(
+        self,
+        i: int,
+        n_bucket_walks: int,
+        activated: np.ndarray,
+    ) -> Tuple[str, float, float, BlockView]:
+        """Load block ``i`` with the learned method; meter; return
+        (decision, eta, load_cost, view) — execution cost is added before
+        feeding the model (the paper's t_f / t_o cover loading *and*
+        executing, §5.2.1)."""
         nv = int(self.bg.block_nverts[i])
         decision = self.loader.choose(i, n_bucket_walks, nv)
         eta = n_bucket_walks / max(nv, 1)
         if decision == "full":
-            nbytes = blk.nbytes_full()
+            nbytes = 4 * (nv + 1) + 4 * int(self.bg.block_nedges[i])
             cost = self.stats.preset.seq_cost(nbytes)
-            self.stats.block_load(i, nbytes, sequential=True)
+            view = self.blocks.get_view(i, sequential=True)
         else:
+            view = self.blocks.partial_view(i, activated)
             nbytes = self.bg.activated_load_bytes(activated)
-            n_act = np.unique(activated).size
+            n_act = view.nverts
             cost = self.stats.preset.rand_cost(n_act, nbytes)
             self.stats.ondemand_load(n_act, nbytes)
-        self.pair.set_slot(1, blk)
-        return decision, eta, cost
+        return decision, eta, cost, view
 
-    def _meter_extension(self, i: int, batch_before: WalkBatch, batch_after: WalkBatch) -> float:
-        """On-demand loads gather extension vertices reached mid-advance.
-        Returns the modelled cost of those gathers."""
+    def _prefetch_bucket(self, i: int, bucket: WalkBatch, n_walks: int) -> None:
+        """Overlap the next bucket's view build with this bucket's advance.
+        The tentative decision mirrors :meth:`_load_ancillary`'s (``choose``
+        is pure); a mismatch — or a bucket grown by Alg. 2 extension in the
+        meantime — just misses the prefetch cache and builds synchronously.
+        """
+        nv = int(self.bg.block_nverts[i])
+        if self.loader.choose(i, n_walks, nv) == "full":
+            self.blocks.prefetch(i)
+        else:
+            s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
+            self.blocks.prefetch_partial(i, self._bucket_activated(bucket, s, e))
+
+    def _advance_on_view(
+        self,
+        i: int,
+        bucket: WalkBatch,
+        bwid: np.ndarray,
+        view: BlockView,
+        decision: str,
+    ) -> Tuple[WalkBatch, np.ndarray, float]:
+        """Advance the bucket on the resident pair until every walk left it
+        or terminated.  On an activated view, walks that reach a
+        non-activated vertex of block ``i`` pause mid-advance; their rows
+        are gathered (on-demand vertex I/O), *appended* to the view, and
+        the advance resumes — the whole block is never materialised.
+        Returns (batch, alive, extension_cost)."""
+        cost = 0.0
+        batch, alive = self._advance(bucket, bwid)
+        if decision != "ondemand":
+            return batch, alive, cost
         s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-        touched = batch_after.cur[(batch_after.cur >= s) & (batch_after.cur < e)]
-        pre = np.unique(
-            np.concatenate(
-                [
-                    batch_before.cur[(batch_before.cur >= s) & (batch_before.cur < e)],
-                    batch_before.prev[(batch_before.prev >= s) & (batch_before.prev < e)],
-                ]
-            )
-        )
-        ext = np.setdiff1d(np.unique(touched), pre, assume_unique=False)
-        if ext.size:
+        while True:
+            stuck = alive & (batch.cur >= s) & (batch.cur < e)
+            if not stuck.any():
+                break
+            pending = np.unique(batch.cur[stuck])
+            ext = pending[~view.has_vertices(pending)]
+            if ext.size == 0:
+                break
             nbytes = self.bg.activated_load_bytes(ext)
             self.stats.ondemand_load(ext.size, nbytes)
-            return self.stats.preset.rand_cost(ext.size, nbytes)
-        return 0.0
+            cost += self.stats.preset.rand_cost(ext.size, nbytes)
+            # first-order buckets alias the same view in both slots — keep
+            # the pair deduped so the extended rows are stored once
+            both = self.pair.views[0] is self.pair.views[1]
+            view = self.blocks.extend_view(view, ext)
+            if both:
+                self.pair.set_slot(0, view)
+            self.pair.set_slot(1, view)
+            batch, alive = self._advance(batch, bwid, alive)
+        return batch, alive, cost
 
-    def run(self) -> WalkResult:
+    def _run(self) -> WalkResult:
         if self.order == 1:
             return self._run_first_order()
         self._initialize()
@@ -118,11 +170,11 @@ class BiBlockEngine(EngineBase):
                     continue
                 batch, wid = self.pool.load(b)
                 self.stats.time_slots += 1
-                blk_b = self.blocks.get(b, sequential=True)
-                self.pair.set_slot(0, blk_b)
+                cur_view = self.blocks.get_view(b, sequential=True)
+                self.pair.set_slot(0, cur_view)
                 # wid-aligned buckets: pending maps bucket id -> (batch, wid)
-                pending: Dict[int, Tuple[WalkBatch, np.ndarray]] = (
-                    split_into_buckets(self.bg.block_starts, batch, b, wid)
+                pending: Dict[int, Tuple[WalkBatch, np.ndarray]] = split_into_buckets(
+                    self.bg.block_starts, batch, b, wid
                 )
                 i = b  # ancillary cursor: strictly increasing (triangular)
                 while True:
@@ -130,21 +182,21 @@ class BiBlockEngine(EngineBase):
                     if not remaining:
                         break
                     i = remaining[0]
-                    # the schedule already knows the next ancillary block:
-                    # overlap its materialisation with this bucket's advance
+                    # the schedule already knows the next ancillary bucket:
+                    # overlap its view build with this bucket's advance
                     if len(remaining) > 1:
-                        self.blocks.prefetch(remaining[1])
+                        nxt = remaining[1]
+                        nxt_bucket, _ = pending[nxt]
+                        self._prefetch_bucket(nxt, nxt_bucket, len(nxt_bucket))
                     bucket, bwid = pending.pop(i)
                     self.stats.bucket_executions += 1
-                    activated = np.concatenate([bucket.prev, bucket.cur])
                     s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-                    activated = activated[(activated >= s) & (activated < e)]
-                    decision, eta, cost = self._load_ancillary(i, len(bucket), activated)
-                    before = bucket
+                    activated = self._bucket_activated(bucket, s, e)
+                    decision, eta, cost, view = self._load_ancillary(i, len(bucket), activated)
+                    self.pair.set_slot(1, view)
                     steps_before = self.stats.steps_sampled
-                    bucket, alive = self._advance(bucket, bwid)
-                    if decision == "ondemand":
-                        cost += self._meter_extension(i, before, bucket)
+                    bucket, alive, ext_cost = self._advance_on_view(i, bucket, bwid, view, decision)
+                    cost += ext_cost
                     cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
                     self.loader.observe(i, eta, cost, decision)
                     bucket, bwid = self._retire(bucket, bwid, alive)
@@ -174,14 +226,14 @@ class BiBlockEngine(EngineBase):
                                 )
                             else:
                                 pending[nb] = (ext_batch.select(m), ext_wid[m])
-        res = self.result()
-        res.loader_summary = self.loader.summary()
-        return res
+        return self.result(loader_summary=self.loader.summary())
 
     def _run_first_order(self) -> WalkResult:
         """§7.8: first-order walks need only the current block; iteration
         scheduling + the learning-based loader on the current block itself
-        ("heavy block loads become light vertex I/Os once few walks remain")."""
+        ("heavy block loads become light vertex I/Os once few walks remain").
+        Both slots hold the *same* view — an on-demand slot is a compacted
+        view over just the walks' current vertices."""
         self._initialize()
         NB = self.bg.num_blocks
         guard = 0
@@ -197,21 +249,18 @@ class BiBlockEngine(EngineBase):
                 self.stats.time_slots += 1
                 self.stats.bucket_executions += 1
                 activated = batch.cur
-                decision, eta, cost = self._load_ancillary(b, len(batch), activated)
-                self.pair.set_slot(0, self.blocks.get(b, charge=False))
+                decision, eta, cost, view = self._load_ancillary(b, len(batch), activated)
+                self.pair.set_slot(0, view)
+                self.pair.set_slot(1, view)
                 # iteration order makes the next current block predictable
                 nxt = next((j for j in range(b + 1, NB) if self.pool.counts[j] > 0), None)
                 if nxt is not None:
                     self.blocks.prefetch(nxt)
-                before = batch
                 steps_before = self.stats.steps_sampled
-                batch, alive = self._advance(batch, wid)
-                if decision == "ondemand":
-                    cost += self._meter_extension(b, before, batch)
+                batch, alive, ext_cost = self._advance_on_view(b, batch, wid, view, decision)
+                cost += ext_cost
                 cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
                 self.loader.observe(b, eta, cost, decision)
                 batch, wid = self._retire(batch, wid, alive)
                 self._persist(batch, wid)
-        res = self.result()
-        res.loader_summary = self.loader.summary()
-        return res
+        return self.result(loader_summary=self.loader.summary())

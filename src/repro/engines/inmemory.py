@@ -1,4 +1,11 @@
-"""In-memory oracle / corpus generator (whole-graph fast path)."""
+"""In-memory oracle / corpus generator (whole-graph fast path).
+
+Runs the same jitted view-pair kernel as the out-of-core engines with the
+whole graph packed into a single full view.  Because every random draw is
+keyed per ``(walk id, hop)`` off the task seed, the oracle's walks are
+*bit-identical* to the walks any out-of-core engine samples for the same
+task — the strongest possible correctness pin for the engines.
+"""
 
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ from repro.core.stats import IOStats
 from repro.core.transition import Node2vec, WalkTask
 
 from .base import WalkResult
-from .step import advance_pair, pow2_pad
+from .step import advance_pair, pow2_pad, remap_search_iters
 
 __all__ = ["InMemoryWalker"]
 
@@ -32,8 +39,8 @@ class InMemoryWalker:
             )
         self.bg = bg
         self.task = task
-        self.k_max = 1 if (isinstance(task.model, Node2vec)
-                           and task.model.p == task.model.q == 1.0) else k_max
+        is_plain = isinstance(task.model, Node2vec) and task.model.p == task.model.q == 1.0
+        self.k_max = 1 if is_plain else k_max
         if task.model.order == 1:
             self.k_max = 1
 
@@ -43,46 +50,56 @@ class InMemoryWalker:
         stats = IOStats()
         src = task.initial_walks(g.num_vertices)
         n = src.shape[0]
-        # whole graph as a single resident "pair" (slot 1 unused)
-        indptr = np.zeros((2, g.num_vertices + 1), np.int32)
-        indptr[0] = g.indptr.astype(np.int32)
-        indptr[1] = 0
-        indices = np.full((2, max(g.num_edges, 1)), -1, np.int32)
-        indices[0, : g.num_edges] = g.indices
-        pair_start = np.array([0, g.num_vertices], np.int32)
-        pair_nverts = np.array([g.num_vertices, 0], np.int32)
+        V = g.num_vertices
+        # the whole graph as one full view; slot 1 aliases slot 0
+        vids = np.arange(V, dtype=np.int32)
+        nverts = np.array([V, V], np.int32)
+        base0 = np.zeros(2, np.int32)
+        indptr = g.indptr.astype(np.int32)
+        indices = g.indices.astype(np.int32)
         has_alias = g.weights is not None
         if has_alias:
             from repro.core.sampling import build_alias_rows
 
-            aj, aq = build_alias_rows(
-                indptr[0], g.num_vertices, max(g.num_edges, 1), g.weights
-            )
-            alias_j = np.stack([aj, aj])
-            alias_q = np.stack([aq, aq])
+            alias_j, alias_q = build_alias_rows(indptr, V, max(g.num_edges, 1), g.weights)
         else:
-            alias_j = np.zeros_like(indices)
-            alias_q = np.ones(indices.shape, np.float32)
+            alias_j = np.zeros(1, np.int32)
+            alias_q = np.ones(1, np.float32)
 
         N = pow2_pad(n)
         pad = N - n
-        pad32 = lambda x: jnp.asarray(
-            np.concatenate([x.astype(np.int32), np.zeros(pad, np.int32)])
-        )
+        pad32 = lambda x: jnp.asarray(np.concatenate([x.astype(np.int32), np.zeros(pad, np.int32)]))
         alive = jnp.asarray(np.concatenate([np.ones(n, bool), np.zeros(pad, bool)]))
+        wid = pad32(np.arange(n, dtype=np.int64))
+        v_iters = remap_search_iters(V)
         t0 = time.perf_counter()
         out = advance_pair(
-            jnp.asarray(pair_start), jnp.asarray(pair_nverts),
-            jnp.asarray(indptr), jnp.asarray(indices),
-            jnp.asarray(alias_j), jnp.asarray(alias_q),
-            pad32(src), pad32(src), pad32(np.zeros(n)), alive,
+            jnp.asarray(vids),
+            jnp.asarray(nverts),
+            jnp.asarray(base0),
+            jnp.asarray(indptr),
+            jnp.asarray(base0),
+            jnp.asarray(indices),
+            jnp.asarray(base0),
+            jnp.asarray(alias_j),
+            jnp.asarray(alias_q),
+            wid,
+            pad32(src),
+            pad32(src),
+            pad32(np.zeros(n)),
+            alive,
             jax.random.PRNGKey(task.seed),
-            jnp.int32(task.length), jnp.float32(task.decay),
+            jnp.int32(task.length),
+            jnp.float32(task.decay),
             jnp.float32(getattr(task.model, "p", 1.0)),
             jnp.float32(getattr(task.model, "q", 1.0)),
-            order=task.model.order, k_max=self.k_max,
+            order=task.model.order,
+            k_max=self.k_max,
             n_iters=int(np.ceil(np.log2(max(g.num_edges, 2)))) + 2,
-            record=record_walks, has_alias=has_alias, max_len=int(task.length),
+            v_iters=v_iters,
+            record=record_walks,
+            has_alias=has_alias,
+            max_len=int(task.length),
         )
         prev_f, cur_f, hop_f, alive_f, steps, trace = jax.tree.map(
             np.asarray, jax.block_until_ready(out)

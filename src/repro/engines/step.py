@@ -1,11 +1,35 @@
 """The jitted pair-advance step shared by every engine.
 
-Vectorised Alg. 2 ``UpdateWalk``: alias/uniform proposal + Node2vec rejection
-test with binary-search membership (:mod:`repro.core.sampling`); the Pallas
-kernel in :mod:`repro.kernels.node2vec_step` is the TPU version of exactly
-this loop.  ``pair_advance_impl`` is the raw function (reused inside
-``shard_map`` by :mod:`repro.core.distributed`); ``advance_pair`` the jitted
-host entry point.
+Vectorised Alg. 2 ``UpdateWalk`` over a *view pair*: alias/uniform proposal +
+Node2vec rejection test with binary-search membership
+(:mod:`repro.core.sampling`); the Pallas kernel in
+:mod:`repro.kernels.node2vec_step` is the TPU version of exactly this loop.
+
+Two properties distinguish this implementation from a textbook step loop:
+
+* **Views, not blocks.**  The resident pair is two
+  :class:`~repro.core.graph.BlockView`\\ s packed into flat ragged arrays —
+  a *full* view (the whole block) or an *activated* view (a compacted CSR
+  over only the bucket's activated vertices plus a remap table).  The kernel
+  resolves a global vertex to its compact row by binary search over the
+  view's sorted ``vids`` remap, so rejection sampling runs directly on the
+  compacted arrays and the device footprint of an on-demand bucket is
+  ``O(activated vertices)``.  A walk that reaches a vertex with no row in
+  the pair simply stops being *resident* (it stays alive); the host engine
+  either routes it (it left the block pair) or gathers its row and extends
+  the view (a mid-advance extension).
+
+* **Counter-based per-walk RNG.**  Every random draw is keyed by
+  ``(base_key, walk_id, hop, round)`` via ``jax.random.fold_in`` — never by
+  call order.  A walk's trajectory is therefore a pure function of the task
+  seed and its walk id, independent of batch composition, view shape,
+  loading decisions, pause/resume, or which engine advances it.  This is
+  what makes {full, ondemand, auto} loading x {ram, disk} graph x
+  {memory, disk} pool — and the in-memory oracle — produce bit-identical
+  walks.
+
+``pair_advance_impl`` is the raw function (reused inside ``shard_map`` by
+:mod:`repro.core.distributed`); ``advance_pair`` the jitted host entry point.
 """
 
 from __future__ import annotations
@@ -15,99 +39,155 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pair_advance_impl", "advance_pair", "pow2_pad"]
+__all__ = [
+    "VID_PAD",
+    "advance_pair",
+    "lower_bound_rows",
+    "pair_advance_impl",
+    "pow2_pad",
+    "remap_search_iters",
+]
+
+#: vids padding value — sorts after every real vertex id
+VID_PAD = jnp.iinfo(jnp.int32).max
+
+
+def remap_search_iters(n: int) -> int:
+    """Binary-search depth for a remap (``vids``) segment of ``n`` entries —
+    the single source of the ``v_iters`` static the kernel consumes."""
+    import numpy as np
+
+    return int(np.ceil(np.log2(max(n, 2)))) + 1
+
+
+def lower_bound_rows(flat, lo, hi, z, *, n_iters: int):
+    """Batched lower bound of ``z`` within the sorted slice ``flat[lo:hi]``.
+
+    Branch-free fixed-iteration binary search (``n_iters`` halvings, like
+    :func:`repro.core.sampling.searchsorted_rows` but returning the
+    insertion *position*).  Returns ``(pos, found)``.
+    """
+    lo0 = lo.astype(jnp.int32)
+    hi0 = hi.astype(jnp.int32)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        val = flat[jnp.clip(mid, 0, flat.shape[0] - 1)]
+        valid = lo_ < hi_
+        go_right = valid & (val < z)
+        lo_ = jnp.where(go_right, mid + 1, lo_)
+        hi_ = jnp.where(valid & ~go_right, mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    pos = jnp.clip(lo_f, 0, flat.shape[0] - 1)
+    return lo_f, (lo_f < hi0) & (flat[pos] == z)
 
 
 def pair_advance_impl(
-    pair_start,      # [2] i32 — global first-vertex of each resident block
-    pair_nverts,     # [2] i32
-    indptr,          # [2, MV+1] i32 (block-local offsets)
-    indices,         # [2, ME]   i32 (global ids, sorted per row)
-    alias_j,         # [2, ME]   i32 (local alias slots; dummy if not has_alias)
-    alias_q,         # [2, ME]   f32
-    prev,            # [N] i32
-    cur,             # [N] i32
-    hop,             # [N] i32
-    alive,           # [N] bool — not yet terminated
-    key,             # PRNG key
-    length,          # () i32 — walk length in edges
-    decay,           # () f32 — per-step continue probability (1.0 = fixed len)
-    p,               # () f32 — node2vec return parameter
-    q,               # () f32 — node2vec in-out parameter
+    vids,        # [SV] i32 — both slots' sorted global vertex ids, concatenated
+    nverts,      # [2] i32  — valid vids per slot
+    vid_base,    # [2] i32  — offset of each slot's segment within vids
+    indptr,      # [SP] i32 — concatenated compact local offsets
+    ptr_base,    # [2] i32  — offset of each slot's indptr segment
+    indices,     # [SE] i32 — concatenated global neighbor ids, sorted per row
+    ind_base,    # [2] i32  — offset of each slot's indices segment
+    alias_j,     # [SE] i32 — row-local alias slots (dummy if not has_alias)
+    alias_q,     # [SE] f32
+    wid,         # [N] i32  — walk ids (the per-walk RNG stream identity)
+    prev,        # [N] i32
+    cur,         # [N] i32
+    hop,         # [N] i32
+    alive,       # [N] bool — not yet terminated
+    key,         # PRNG base key (task seed — NOT split per call)
+    length,      # () i32 — walk length in edges
+    decay,       # () f32 — per-step continue probability (1.0 = fixed len)
+    p,           # () f32 — node2vec return parameter
+    q,           # () f32 — node2vec in-out parameter
     *,
     order: int,
     k_max: int,
     n_iters: int,
+    v_iters: int,
     record: bool,
     has_alias: bool,
     max_len: int,
 ):
-    """Advance every walk until it leaves the resident pair or terminates.
-
-    Vectorised Alg. 2 ``UpdateWalk``: "walks keep moving while they jump
-    between the two blocks in memory".  Returns
-    ``(prev, cur, hop, alive, steps_taken, trace)`` where ``trace[n, h]`` is
-    the vertex walk n reached at hop h during this call (-1 = no move).
+    """Advance every walk until it leaves the resident view pair or
+    terminates.  Returns ``(prev, cur, hop, alive, steps_taken, trace)``
+    where ``trace[n, h]`` is the vertex walk n reached at hop h during this
+    call (-1 = no move).
     """
     N = prev.shape[0]
-    ME = indices.shape[1]
-    flat_indices = indices.reshape(-1)
-    flat_alias_j = alias_j.reshape(-1)
-    flat_alias_q = alias_q.reshape(-1)
     max_bias = jnp.maximum(1.0, jnp.maximum(1.0 / p, 1.0 / q))
     # one spare "dump" column (max_len+1) absorbs writes of frozen walks
     trace0 = jnp.full((N, max_len + 2) if record else (1, 1), -1, dtype=jnp.int32)
     iota = jnp.arange(N)
 
-    def in_pair(v):
-        return ((v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])) | (
-            (v >= pair_start[1]) & (v < pair_start[1] + pair_nverts[1])
-        )
-
     def locate(v):
-        in0 = (v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])
-        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
-        row = jnp.clip(v - pair_start[slot], 0, indptr.shape[1] - 2)
-        return slot, row
+        """Resolve global vertex -> (slot, compact row, found) via the remap."""
+        r0, found0 = lower_bound_rows(
+            vids,
+            jnp.full((N,), vid_base[0]),
+            jnp.full((N,), vid_base[0] + nverts[0]),
+            v,
+            n_iters=v_iters,
+        )
+        r1, found1 = lower_bound_rows(
+            vids,
+            jnp.full((N,), vid_base[1]),
+            jnp.full((N,), vid_base[1] + nverts[1]),
+            v,
+            n_iters=v_iters,
+        )
+        slot = jnp.where(found0, 0, 1).astype(jnp.int32)
+        row = jnp.where(found0, r0 - vid_base[0], r1 - vid_base[1])
+        row = jnp.clip(row, 0, None)
+        return slot, row, found0 | found1
 
     def cond(state):
-        _, _, _, _, resident, _, _, _, it = state
+        _, _, _, _, resident, _, _, _, _, it = state
         return jnp.any(resident) & (it <= max_len)
 
     def body(state):
-        prev_, cur_, hop_, alive_, resident, key_, steps_, trace_, it = state
-        key_, k_prop, k_term = jax.random.split(key_, 3)
+        prev_, cur_, hop_, alive_, resident, slot, row, steps_, trace_, it = state
+        # counter-based keys: one stream per (walk id, hop)
+        kw = jax.vmap(
+            lambda w, h: jax.random.fold_in(jax.random.fold_in(key, w), h),
+        )(wid, hop_)
 
-        movable = resident  # alive & cur in pair
-        slot, row = locate(cur_)
-        row_start = indptr[slot, row]
-        deg = indptr[slot, row + 1] - row_start
+        movable = resident  # alive & cur has a row in the pair
+        # (slot, row) for cur_ is carried from the previous iteration's
+        # locate(new_cur) — one remap search per hop, not two
+        row_start = indptr[ptr_base[slot] + row]
+        deg = indptr[ptr_base[slot] + row + 1] - row_start
         dead = movable & (deg <= 0)
         movable = movable & (deg > 0)
         deg_c = jnp.maximum(deg, 1)
 
         if order == 2:
-            uslot, urow = locate(prev_)
-            u_start = indptr[uslot, urow]
-            ulo = uslot * ME + u_start
-            uhi = ulo + (indptr[uslot, urow + 1] - u_start)
+            uslot, urow, _ = locate(prev_)
+            u_start = indptr[ptr_base[uslot] + urow]
+            ulo = ind_base[uslot] + u_start
+            uhi = ulo + (indptr[ptr_base[uslot] + urow + 1] - u_start)
 
         # ---- proposal + rejection over k_max rounds -------------------------
         def propose(kk, carry):
-            z_, accepted_, key_p = carry
-            key_p, k1 = jax.random.split(key_p)
-            u123 = jax.random.uniform(k1, (3, N))
+            z_, accepted_ = carry
+            kr = jax.vmap(lambda k_: jax.random.fold_in(k_, kk))(kw)
+            u123 = jax.vmap(lambda k_: jax.random.uniform(k_, (3,)))(kr).T
             kloc = jnp.minimum((u123[0] * deg_c).astype(jnp.int32), deg_c - 1)
-            idx = slot * ME + row_start + kloc
+            idx = ind_base[slot] + row_start + kloc
             if has_alias:
-                take_alias = u123[1] >= flat_alias_q[idx]
-                kloc = jnp.where(take_alias, flat_alias_j[idx], kloc)
-                idx = slot * ME + row_start + kloc
-            zk = flat_indices[idx]
+                take_alias = u123[1] >= alias_q[idx]
+                kloc = jnp.where(take_alias, alias_j[idx], kloc)
+                idx = ind_base[slot] + row_start + kloc
+            zk = indices[idx]
             if order == 2:
                 from repro.core.sampling import searchsorted_rows
 
-                memb = searchsorted_rows(flat_indices, ulo, uhi, zk, n_iters=n_iters)
+                memb = searchsorted_rows(indices, ulo, uhi, zk, n_iters=n_iters)
                 bias = jnp.where(zk == prev_, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
                 acc_p = bias / max_bias
                 acc_p = jnp.where(hop_ == 0, 1.0, acc_p)  # first step: 1st-order
@@ -116,31 +196,52 @@ def pair_advance_impl(
             last = kk == k_max - 1
             take = (~accepted_) & movable & ((u123[2] < acc_p) | last)
             z_ = jnp.where(take, zk, z_)
-            return z_, accepted_ | take, key_p
+            return z_, accepted_ | take
 
-        z, _, _ = jax.lax.fori_loop(0, k_max, propose, (cur_, ~movable, k_prop))
+        z, _ = jax.lax.fori_loop(0, k_max, propose, (cur_, ~movable))
 
         # ---- commit ----------------------------------------------------------
+        u_term = jax.vmap(lambda k_: jax.random.uniform(jax.random.fold_in(k_, k_max)))(kw)
         new_hop = hop_ + movable.astype(jnp.int32)
         new_prev = jnp.where(movable, cur_, prev_)
         new_cur = jnp.where(movable, z, cur_)
         finished = movable & (new_hop >= length)
-        stopped = movable & (jax.random.uniform(k_term, (N,)) >= decay)
+        stopped = movable & (u_term >= decay)
         new_alive = alive_ & ~dead & ~finished & ~stopped
-        new_resident = new_alive & in_pair(new_cur)
+        new_slot, new_row, new_found = locate(new_cur)
+        new_resident = new_alive & new_found
         if record:
             cols = jnp.where(movable, jnp.clip(new_hop, 0, max_len), max_len + 1)
             trace_ = trace_.at[iota, cols].set(new_cur)
         steps_ = steps_ + movable.astype(jnp.int32).sum()
-        return (new_prev, new_cur, new_hop, new_alive, new_resident, key_,
-                steps_, trace_, it + 1)
+        return (
+            new_prev,
+            new_cur,
+            new_hop,
+            new_alive,
+            new_resident,
+            new_slot,
+            new_row,
+            steps_,
+            trace_,
+            it + 1,
+        )
 
-    resident0 = alive & in_pair(cur)
-    init = (prev, cur, hop, alive, resident0, key,
-            jnp.zeros((), jnp.int32), trace0, jnp.zeros((), jnp.int32))
-    prev_f, cur_f, hop_f, alive_f, _, _, steps, trace, _ = jax.lax.while_loop(
-        cond, body, init
+    slot0, row0, found0 = locate(cur)
+    resident0 = alive & found0
+    init = (
+        prev,
+        cur,
+        hop,
+        alive,
+        resident0,
+        slot0,
+        row0,
+        jnp.zeros((), jnp.int32),
+        trace0,
+        jnp.zeros((), jnp.int32),
     )
+    prev_f, cur_f, hop_f, alive_f, _, _, _, steps, trace, _ = jax.lax.while_loop(cond, body, init)
     if record:
         trace = trace[:, : max_len + 1]
     return prev_f, cur_f, hop_f, alive_f, steps, trace
@@ -149,7 +250,7 @@ def pair_advance_impl(
 #: jitted entry point (host engines); the raw impl is reused inside shard_map
 advance_pair = partial(
     jax.jit,
-    static_argnames=("order", "k_max", "n_iters", "record", "has_alias", "max_len"),
+    static_argnames=("order", "k_max", "n_iters", "v_iters", "record", "has_alias", "max_len"),
 )(pair_advance_impl)
 
 

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.graph import (
     BlockedGraph,
+    BlockView,
     CSRGraph,
     ResidentBlock,
     activated_bytes,
@@ -105,8 +106,15 @@ def write_block_file(bg: BlockedGraph, path: str) -> dict:
     degrees = g.degrees.astype(np.uint32)
 
     header = _HEADER.pack(
-        MAGIC, VERSION, flags, nb, g.num_vertices, g.num_edges,
-        bg.max_block_verts, bg.max_block_edges, 0,
+        MAGIC,
+        VERSION,
+        flags,
+        nb,
+        g.num_vertices,
+        g.num_edges,
+        bg.max_block_verts,
+        bg.max_block_edges,
+        0,
     )
     meta_bytes = _HEADER.size + 2 * 8 * (nb + 1) + 4 * g.num_vertices
 
@@ -121,7 +129,8 @@ def write_block_file(bg: BlockedGraph, path: str) -> dict:
     # unique temp in the destination directory (atomic publish, concurrent
     # writers to the same path never share a temp file), removed on any error
     fd, tmp_path = tempfile.mkstemp(
-        prefix=os.path.basename(path) + ".", suffix=".tmp",
+        prefix=os.path.basename(path) + ".",
+        suffix=".tmp",
         dir=os.path.dirname(os.path.abspath(path)),
     )
     data_bytes = 0
@@ -383,15 +392,14 @@ class DiskBlockedGraph:
         return blk
 
     # -- on-demand path --------------------------------------------------------
-    def read_rows(self, b: int, vertices: Iterable[int]) -> Dict[int, np.ndarray]:
-        """On-demand load: per-vertex partial reads of block ``b``.
-
-        For each unique requested vertex this reads its 8-byte index-entry
-        pair and then its neighbor segment — two ``pread`` calls per vertex,
-        exactly the access pattern of the paper's Fig. 5(b) — and returns
-        ``{vertex: global neighbor ids}``.  The bytes read equal
-        ``activated_load_bytes(vertices)`` by construction.
-        """
+    def _read_rows_ext(self, b: int, vertices: Iterable[int]):
+        """Per-vertex partial reads of block ``b``: for each unique
+        requested vertex, one ``pread`` of its 8-byte index-entry pair then
+        one of its neighbor segment — exactly the access pattern of the
+        paper's Fig. 5(b).  Returns ``(vs, rows, extents)`` with ``vs``
+        sorted, ``rows[k]`` the global neighbor ids of ``vs[k]`` and
+        ``extents[k] = (rs, re)`` its within-block edge range (reused by the
+        alias reader so the index pair is never fetched twice)."""
         s, e = int(self.block_starts[b]), int(self.block_starts[b + 1])
         vs = np.unique(np.asarray(list(vertices), dtype=np.int64))
         if vs.size and (vs[0] < s or vs[-1] >= e):
@@ -399,7 +407,8 @@ class DiskBlockedGraph:
         nv = int(self.block_nverts[b])
         off = int(self.block_offsets[b])
         indices_off = off + 4 * (nv + 1)
-        out: Dict[int, np.ndarray] = {}
+        rows = []
+        extents = []
         nbytes = 0
         for v in vs:
             lv = int(v) - s
@@ -409,13 +418,82 @@ class DiskBlockedGraph:
             )
             rs, re = int(pair[0]), int(pair[1])
             nbytes += 8
-            seg = self._pread_exact(
-                indices_off + 4 * rs, 4 * (re - rs), what=f"row v={v}"
-            )
-            out[int(v)] = np.frombuffer(seg, np.int32).copy()
+            seg = self._pread_exact(indices_off + 4 * rs, 4 * (re - rs), what=f"row v={v}")
+            rows.append(np.frombuffer(seg, np.int32).copy())
+            extents.append((rs, re))
             nbytes += 4 * (re - rs)
         self.ondemand_reads += 1
         self.ondemand_bytes_read += nbytes
+        return vs, rows, extents
+
+    def read_rows(self, b: int, vertices: Iterable[int]) -> Dict[int, np.ndarray]:
+        """On-demand load: ``{vertex: global neighbor ids}`` for each unique
+        requested vertex of block ``b``.  The bytes read equal
+        ``activated_load_bytes(vertices)`` by construction."""
+        vs, rows, _ = self._read_rows_ext(b, vertices)
+        return {int(v): seg for v, seg in zip(vs, rows)}
+
+    def partial_view(self, b: int, vertices: Iterable[int]) -> BlockView:
+        """An *activated* :class:`~repro.core.graph.BlockView` of block
+        ``b``: compacted local CSR over only the (unique) requested vertices
+        plus the remap table — what on-demand buckets execute on.
+
+        Index + CSR bytes are tallied in ``ondemand_bytes_read`` (equal to
+        ``activated_load_bytes``); for a weighted container the rows' alias
+        segments are read too (derived data, tallied in ``aux_bytes_read``
+        like a full load's).  Mirrors ``BlockedGraph.partial_view`` — same
+        view, real reads.
+        """
+        vs, segs, extents = self._read_rows_ext(b, vertices)
+        alias_segs = None
+        if self.weighted:
+            alias_segs = self._read_alias_rows(b, vs, extents)
+        return BlockView.from_rows(b, vs, segs, alias_segs)
+
+    def gather_view(self, vertices: Iterable[int]) -> BlockView:
+        """A cross-block activated view (``block_id == -1``): per-vertex
+        partial reads grouped by owning block.  Blocks hold contiguous
+        vertex ranges, so concatenating the per-block (sorted) rows in
+        block order yields a globally sorted remap table.  Real bytes are
+        tallied like any on-demand read."""
+        vs_all = np.unique(np.asarray(list(vertices), dtype=np.int64))
+        owners = block_of(self.block_starts, vs_all)
+        all_vs = []
+        all_segs = []
+        all_alias = [] if self.weighted else None
+        for b in np.unique(owners):
+            sub = vs_all[owners == b]
+            vs, segs, extents = self._read_rows_ext(int(b), sub)
+            all_vs.append(vs)
+            all_segs.extend(segs)
+            if self.weighted:
+                all_alias.extend(self._read_alias_rows(int(b), vs, extents))
+        vids = np.concatenate(all_vs) if all_vs else np.zeros(0, np.int64)
+        return BlockView.from_rows(-1, vids, all_segs, all_alias)
+
+    def _read_alias_rows(self, b: int, vs: np.ndarray, extents):
+        """Partial reads of the rows' alias_j/alias_q segments, at the edge
+        ranges ``extents`` already fetched by :meth:`_read_rows_ext` — no
+        second index-pair read per vertex."""
+        ne = int(self.block_nedges[b])
+        nv = int(self.block_nverts[b])
+        off = int(self.block_offsets[b])
+        aux_off = off + 4 * (nv + 1) + 4 * ne  # weights, then alias_j, alias_q
+        out = []
+        nbytes = 0
+        for v, (rs, re) in zip(vs, extents):
+            rl = re - rs
+            aj = np.frombuffer(
+                self._pread_exact(aux_off + 4 * ne + 4 * rs, 4 * rl, what=f"alias_j v={v}"),
+                np.int32,
+            ).copy()
+            aq = np.frombuffer(
+                self._pread_exact(aux_off + 8 * ne + 4 * rs, 4 * rl, what=f"alias_q v={v}"),
+                np.float32,
+            ).copy()
+            out.append((aj, aq))
+            nbytes += 8 * rl
+        self.aux_bytes_read += nbytes
         return out
 
     def partial_block(self, b: int, vertices: Iterable[int]) -> ResidentBlock:

@@ -1,24 +1,36 @@
-"""Block store — resident-block cache + background prefetch over a graph
+"""Block store — resident-view cache + background prefetch over a graph
 backend (the in-RAM :class:`~repro.core.graph.BlockedGraph` or the
 file-backed :class:`~repro.io.blockfile.DiskBlockedGraph`).
 
-The triangular schedule (§4.2) makes the *next* ancillary block known before
-the current bucket finishes executing, so its materialisation can overlap the
-jitted ``advance_pair`` call.  :class:`BlockStore` wraps the backend's
-``materialize_block`` with
+The store's currency is the :class:`~repro.core.graph.BlockView`: engines
+ask for *full* views (the whole block) or *partial* views (a compacted CSR
+over exactly the activated vertices of a bucket).  The triangular schedule
+(§4.2) makes the *next* ancillary bucket known before the current one
+finishes executing, so either kind of load can overlap the jitted
+``advance_pair`` call:
 
 * an LRU cache of materialised :class:`~repro.core.graph.ResidentBlock`\\ s
   (bounded, unlike the unbounded page-cache model inside ``BlockedGraph``);
-* a one-worker background prefetcher: :meth:`prefetch` starts materialising a
-  block on a thread; a later :meth:`get` joins the in-flight future instead
-  of materialising on the critical path.
+* one pending partial view per block: a bucket only ever *gains* walks
+  between the prefetch and its execution (Alg. 2 extension), so a
+  prefetched partial view is a subset of the set eventually requested —
+  :meth:`partial_view` serves it as a base and gathers only the missing
+  rows, and discards it if it is not a subset (a stale prediction).  The
+  served view always holds *exactly* the requested activated set, so
+  prefetching can never change what executes;
+* a one-worker background prefetcher: :meth:`prefetch` /
+  :meth:`prefetch_partial` start materialising on a thread; a later
+  :meth:`get` / :meth:`partial_view` joins the in-flight future instead of
+  materialising on the critical path.  This is the seam the async bucket
+  pipeline grows from.
 
 Accounting is unchanged from the seed engines: every :meth:`get` with
-``charge=True`` charges exactly one ``block_load`` — prefetching never
-charges, so a prefetched block is served without a second charge and the
-deterministic I/O counts (the paper's tables) are identical with prefetch on
-or off.  Prefetch wins show up as real wall-clock overlap, and are counted
-in :attr:`prefetch_hits`.
+``charge=True`` charges exactly one ``block_load``; partial views are never
+charged here (the engine charges the on-demand transfer deterministically).
+Prefetching never charges, so the deterministic I/O counts (the paper's
+tables) are identical with prefetch on or off.  Prefetch wins show up as
+real wall-clock overlap, counted in :attr:`prefetch_hits` /
+:attr:`partial_prefetch_hits`.
 """
 
 from __future__ import annotations
@@ -29,17 +41,20 @@ from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, Optional
 
-from repro.core.graph import ResidentBlock
+import numpy as np
+
+from repro.core.graph import BlockView, ResidentBlock
 from repro.core.stats import IOStats
 
 __all__ = ["BlockStore"]
 
 
 class BlockStore:
-    """Metered, cached, prefetching access to a graph backend's blocks.
+    """Metered, cached, prefetching access to a graph backend's block views.
 
     ``bg`` is anything exposing ``materialize_block(b) -> ResidentBlock``
-    plus the blocked-graph metadata surface — for the file-backed
+    and ``partial_view(b, vertices) -> BlockView`` plus the blocked-graph
+    metadata surface — for the file-backed
     :class:`~repro.io.blockfile.DiskBlockedGraph` the LRU + prefetch thread
     here is what hides real file reads from the critical path.
     """
@@ -60,13 +75,18 @@ class BlockStore:
         self.enable_prefetch = enable_prefetch
         self._cache: "OrderedDict[int, ResidentBlock]" = OrderedDict()
         self._futures: Dict[int, Future] = {}
+        # one pending partial-view build per block (consumed by partial_view)
+        self._pfutures: Dict[int, Future] = {}
         self._lock = threading.Lock()
-        self._mat_lock = threading.Lock()  # serialises materialize_block
+        self._mat_lock = threading.Lock()  # serialises backend reads
         self._executor: Optional[ThreadPoolExecutor] = None
         self.prefetch_issued = 0
         self.prefetch_hits = 0
         self.cache_hits = 0
         self.demand_loads = 0
+        self.partial_prefetch_issued = 0
+        self.partial_prefetch_hits = 0
+        self.partial_builds = 0
         #: wall time get() spent materialising on the calling thread — the
         #: quantity prefetch removes from the critical path
         self.sync_materialize_time = 0.0
@@ -78,12 +98,24 @@ class BlockStore:
         with self._mat_lock:
             return self.bg.materialize_block(b)
 
+    def _build_partial(self, b: int, vertices: np.ndarray) -> BlockView:
+        with self._mat_lock:
+            return self.bg.partial_view(b, vertices)
+
     def _insert(self, b: int, blk: ResidentBlock) -> None:
         with self._lock:
             self._cache[b] = blk
             self._cache.move_to_end(b)
             while len(self._cache) > self.capacity:
                 self._cache.popitem(last=False)
+
+    def _submit(self, fn, *args) -> Future:
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=1,
+                thread_name_prefix="blockstore-prefetch",
+            )
+        return self._executor.submit(fn, *args)
 
     # -- the engine-facing API -------------------------------------------------
     def prefetch(self, b: int) -> None:
@@ -94,12 +126,27 @@ class BlockStore:
         with self._lock:
             if b in self._cache or b in self._futures:
                 return
-            if self._executor is None:
-                self._executor = ThreadPoolExecutor(
-                    max_workers=1, thread_name_prefix="blockstore-prefetch"
-                )
-            self._futures[b] = self._executor.submit(self._materialize, b)
+            self._futures[b] = self._submit(self._materialize, b)
             self.prefetch_issued += 1
+
+    def prefetch_partial(self, b: int, vertices: np.ndarray) -> None:
+        """Start building the partial view of block ``b`` over ``vertices``
+        in the background (no charge).  A later :meth:`partial_view` call
+        uses it as a base when its set is a subset of the request (buckets
+        only grow between prefetch and execution) and gathers the missing
+        rows; otherwise it is discarded."""
+        if not self.enable_prefetch:
+            return
+        b = int(b)
+        with self._lock:
+            fut = self._pfutures.get(b)
+            if fut is not None and not fut.done():
+                return  # a build is in flight; don't queue duplicates
+            # a finished-but-unconsumed future is stale (its bucket chose a
+            # full load after all) — replace it so later prefetches aren't
+            # blocked forever and partial_view never pops a dead prediction
+            self._pfutures[b] = self._submit(self._build_partial, b, np.asarray(vertices))
+            self.partial_prefetch_issued += 1
 
     def get(self, b: int, *, sequential: bool = True, charge: bool = True) -> ResidentBlock:
         """Resident block ``b``; charges one ``block_load`` unless ``charge=False``.
@@ -129,21 +176,78 @@ class BlockStore:
             self.stats.block_load(b, blk.nbytes_full(), sequential=sequential)
         return blk
 
+    def get_view(self, b: int, *, sequential: bool = True, charge: bool = True) -> BlockView:
+        """Full :class:`BlockView` of block ``b`` (same charging as
+        :meth:`get`)."""
+        return BlockView.from_resident(self.get(b, sequential=sequential, charge=charge))
+
+    def partial_view(self, b: int, vertices: np.ndarray) -> BlockView:
+        """Activated view of block ``b`` over exactly the unique
+        ``vertices``.
+
+        Never charges — the *engine* charges the on-demand transfer
+        (``IOStats.ondemand_load``) deterministically, whether or not the
+        view was prefetched.  A pending prefetched view whose vertex set is
+        a subset of the request becomes the base; only the missing rows are
+        gathered.  The returned view holds *exactly* the requested set
+        either way, so prefetching never changes what executes.
+        """
+        b = int(b)
+        vs = np.unique(np.asarray(vertices, dtype=np.int64))
+        base = None
+        with self._lock:
+            fut = self._pfutures.pop(b, None)
+        if fut is not None:
+            t0 = time.perf_counter()
+            base = fut.result()
+            self.prefetch_wait_time += time.perf_counter() - t0
+        if base is not None:
+            in_req = np.isin(base.vids, vs)
+            if in_req.all():
+                self.partial_prefetch_hits += 1
+                missing = vs[~base.has_vertices(vs)]
+                if missing.size:
+                    base = self.extend_view(base, missing)
+                return base
+        t0 = time.perf_counter()
+        view = self._build_partial(b, vs)
+        self.sync_materialize_time += time.perf_counter() - t0
+        self.partial_builds += 1
+        return view
+
+    def extend_view(self, view: BlockView, vertices: np.ndarray) -> BlockView:
+        """Mid-advance extension gather: append the rows of ``vertices`` to
+        an activated ``view`` (never charges; the engine accounts the
+        gather as on-demand vertex I/O)."""
+        extra = self._build_partial(view.block_id, vertices)
+        return view.extended(extra)
+
+    def gather_view(self, vertices: np.ndarray) -> BlockView:
+        """Cross-block activated view over arbitrary vertices (never
+        charges; the engine accounts the per-vertex fetches)."""
+        with self._mat_lock:
+            return self.bg.gather_view(vertices)
+
     def counters(self) -> dict:
         return {
             "prefetch_issued": self.prefetch_issued,
             "prefetch_hits": self.prefetch_hits,
             "cache_hits": self.cache_hits,
             "demand_loads": self.demand_loads,
+            "partial_prefetch_issued": self.partial_prefetch_issued,
+            "partial_prefetch_hits": self.partial_prefetch_hits,
+            "partial_builds": self.partial_builds,
             "sync_materialize_time": self.sync_materialize_time,
             "prefetch_wait_time": self.prefetch_wait_time,
         }
 
     def close(self) -> None:
         with self._lock:
-            futures, self._futures = self._futures, {}
+            futures = list(self._futures.values()) + list(self._pfutures.values())
+            self._futures = {}
+            self._pfutures = {}
             executor, self._executor = self._executor, None
-        for fut in futures.values():
+        for fut in futures:
             fut.cancel()
         if executor is not None:
             executor.shutdown(wait=True)

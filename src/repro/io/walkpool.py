@@ -65,8 +65,7 @@ class _PoolBase:
 
     backend = "base"
 
-    def __init__(self, num_blocks: int, stats: IOStats,
-                 flush_walks: Optional[int] = 1 << 18):
+    def __init__(self, num_blocks: int, stats: IOStats, flush_walks: Optional[int] = 1 << 18):
         self.num_blocks = num_blocks
         self.stats = stats
         self.flush_walks = flush_walks
@@ -145,8 +144,7 @@ class MemoryWalkPool(_PoolBase):
 
     backend = "memory"
 
-    def __init__(self, num_blocks: int, stats: IOStats,
-                 flush_walks: Optional[int] = 1 << 18):
+    def __init__(self, num_blocks: int, stats: IOStats, flush_walks: Optional[int] = 1 << 18):
         super().__init__(num_blocks, stats, flush_walks)
         self._spilled: Dict[int, List[Tuple[WalkBatch, np.ndarray]]] = {
             b: [] for b in range(num_blocks)

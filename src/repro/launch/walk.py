@@ -81,7 +81,7 @@ def main():
                    prefetch=not args.no_prefetch)
     engines = args.engine or ["biblock", "sogw"]
     print("engine,block_ios,vertex_ios,ondemand_ios,walk_bytes_written,"
-          "prefetch_hits,sim_io_s,exec_s,sim_wall_s")
+          "peak_resident_bytes,prefetch_hits,sim_io_s,exec_s,sim_wall_s")
     for name in engines:
         if name == "biblock":
             res = BiBlockEngine(bg, task, loading=args.loading, **pool_kw).run()
@@ -97,7 +97,7 @@ def main():
         s = res.stats
         hits = (res.block_store_counters or {}).get("prefetch_hits", 0)
         print(f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
-              f"{s.walk_bytes_written},{hits},"
+              f"{s.walk_bytes_written},{s.peak_resident_bytes},{hits},"
               f"{s.sim_io_time:.4f},{s.exec_time:.4f},{s.sim_wall_time:.4f}")
 
 

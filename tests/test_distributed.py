@@ -77,3 +77,31 @@ def test_distributed_engine_subprocess():
     assert out["sweeps"] <= 9
     assert out["pair_unique"] and out["rounds_within_half"]
     assert out["q_alive"] == 0
+
+
+def test_distributed_single_device_matches_oracle():
+    """In-process pin for the distributed sweep (1x1 mesh, one block): the
+    wid-carrying routing + counter-based RNG must reproduce the in-memory
+    oracle's walks bitwise — the same identity the multi-rank subprocess
+    test asserts when the pinned jax grows shard_map support."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import (
+        InMemoryWalker,
+        erdos_renyi,
+        partition_into_n_blocks,
+        rwnv_task,
+    )
+    from repro.core.distributed import DistributedWalkEngine
+
+    g = erdos_renyi(300, 2400, seed=3)
+    bg = partition_into_n_blocks(g, 1)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    task = rwnv_task(p=2.0, q=0.5, walks_per_vertex=1, length=6, seed=5)
+    out = DistributedWalkEngine(bg, task, mesh).run()
+    assert out["alive"].sum() == 0
+    oracle = InMemoryWalker(bg, task).run(record_walks=False)
+    counts = np.bincount(out["cur"], minlength=g.num_vertices)
+    np.testing.assert_array_equal(counts, oracle.endpoint_counts)
