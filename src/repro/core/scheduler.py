@@ -15,6 +15,7 @@ from typing import Iterator, Optional
 import numpy as np
 
 __all__ = [
+    "TimeSlotPlan",
     "triangular_pairs",
     "triangular_block_io_bound",
     "standard_block_io_bound",
@@ -32,6 +33,52 @@ def triangular_pairs(num_blocks: int) -> Iterator[tuple[int, list[int]]]:
     """Yield (current block b, ancillary ids b+1..N_B-1) — Alg. 1 lines 2/13."""
     for b in range(num_blocks - 1):
         yield b, list(range(b + 1, num_blocks))
+
+
+class TimeSlotPlan:
+    """The triangular slot order (Eq. 3) as an explicit, queryable plan.
+
+    One *slot* is the execution of one current block within a superstep.
+    Second-order tasks visit ``b = 0 .. N_B-2`` (the last block never owns a
+    skewed pool: ``min(B(u), B(v)) < N_B-1`` whenever the pair spans blocks);
+    first-order tasks visit every block (traditional ``B(cur)`` association,
+    §7.8).  The plan is what the async bucket pipeline schedules from: it
+    names the *next* slot (including the wrap into the next superstep) before
+    the current one finishes, so the next slot's pool drain, bucket split and
+    current-view load can start on background workers.  The plan is static;
+    which slots actually *run* stays a property of the live pool counts, so
+    planning can never change what executes.
+    """
+
+    def __init__(self, num_blocks: int, order: int = 2):
+        self.num_blocks = num_blocks
+        self.order = order
+        last = num_blocks if order == 1 else max(num_blocks - 1, 1)
+        self.slot_blocks = tuple(range(last))
+
+    def slots(self) -> Iterator[int]:
+        """Current-block ids of one superstep, in triangular order."""
+        return iter(self.slot_blocks)
+
+    def ancillary_after(self, b: int) -> range:
+        """Ancillary block ids a slot on ``b`` may visit (strictly increasing
+        bucket cursor, Alg. 1)."""
+        return range(b + 1, self.num_blocks)
+
+    def next_slot(self, b: int, has_walks) -> Optional[int]:
+        """The next slot after ``b`` that currently has walks pending, probing
+        the rest of this superstep first, then wrapping into the next one.
+
+        ``has_walks(block) -> bool`` queries live state (pool counts plus any
+        already-preloaded batches); a block that only *gains* walks after this
+        call is simply picked later — a missed overlap, never a missed slot.
+        """
+        n = len(self.slot_blocks)
+        for k in range(1, n + 1):
+            cand = self.slot_blocks[(b + k) % n]
+            if has_walks(cand):
+                return cand
+        return None
 
 
 def triangular_block_io_bound(num_blocks: int) -> int:

@@ -59,6 +59,9 @@ class IOStats:
         self.ondemand_ios = 0
         self.ondemand_bytes = 0
         self.peak_resident_bytes = 0
+        self.overlapped_load_bytes = 0
+        self.pipeline_stall_slots = 0
+        self.writer_queue_peak = 0
         self.time_slots = 0
         self.supersteps = 0
         self.steps_sampled = 0
@@ -97,8 +100,28 @@ class IOStats:
         the footprint on-demand *execution* shrinks versus full loads."""
         self.peak_resident_bytes = max(self.peak_resident_bytes, int(nbytes))
 
-    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16,
-                kind: str = "write") -> None:
+    def note_overlapped(self, nbytes: int) -> None:
+        """Counter: bytes whose load was *initiated off the critical path*
+        by a background worker (block/partial-view prefetch thread,
+        walk-pool writer preload) and later consumed by the engine.  The
+        serial reference mode still reports its prefetch-thread hits here —
+        it was never prefetch-free; the async pipeline's *additional*
+        overlap is the delta against it (the ``pipeline_overlap`` bench
+        asserts it is positive).  Never part of the deterministic I/O
+        charges."""
+        self.overlapped_load_bytes += int(nbytes)
+
+    def note_stall_slot(self) -> None:
+        """Counter: a time slot whose walk-pool load ran synchronously on
+        the critical path (the pipeline had no preload in flight — serial
+        mode, the first slot of a run, or a mispredicted next slot)."""
+        self.pipeline_stall_slots += 1
+
+    def note_writer_queue(self, depth: int) -> None:
+        """Gauge: walk-pool writer queue depth; keeps the high-water mark."""
+        self.writer_queue_peak = max(self.writer_queue_peak, int(depth))
+
+    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16, kind: str = "write") -> None:
         """Walk pool flush/load: 128-bit encoded walks (paper §6.1).
 
         ``kind`` distinguishes spills (``"write"``) from pool loads
@@ -141,6 +164,9 @@ class IOStats:
             "walk_bytes_written": self.walk_bytes_written,
             "walk_bytes_read": self.walk_bytes_read,
             "peak_resident_bytes": self.peak_resident_bytes,
+            "overlapped_load_bytes": self.overlapped_load_bytes,
+            "pipeline_stall_slots": self.pipeline_stall_slots,
+            "writer_queue_peak": self.writer_queue_peak,
             "time_slots": self.time_slots,
             "supersteps": self.supersteps,
             "steps_sampled": self.steps_sampled,

@@ -78,9 +78,7 @@ def _split_hi_lo(x: np.ndarray, lo_bits: int) -> Tuple[np.ndarray, np.ndarray]:
     return (x >> lo_bits).astype(np.uint32), (x & ((1 << lo_bits) - 1)).astype(np.uint32)
 
 
-def pack_walks(
-    batch: WalkBatch, block_starts: np.ndarray
-) -> np.ndarray:
+def pack_walks(batch: WalkBatch, block_starts: np.ndarray) -> np.ndarray:
     """Pack to the 128-bit record: returns uint32[n, 4].
 
     ``cur`` is stored as (cur_block, offset-in-block) exactly as the paper's

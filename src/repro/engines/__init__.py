@@ -18,6 +18,7 @@ from .base import EngineBase, ResidentPair, WalkResult, _DeviceBlockPair  # noqa
 from .baselines import PlainBucketEngine, SOGWEngine
 from .biblock import BiBlockEngine
 from .inmemory import InMemoryWalker
+from .pipeline import BucketCursor, BucketPipeline
 from .step import advance_pair, pair_advance_impl, pow2_pad
 
 __all__ = [
@@ -25,6 +26,8 @@ __all__ = [
     "ResidentPair",
     "WalkResult",
     "BiBlockEngine",
+    "BucketCursor",
+    "BucketPipeline",
     "PlainBucketEngine",
     "SOGWEngine",
     "InMemoryWalker",

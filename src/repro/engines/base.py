@@ -30,7 +30,7 @@ from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.stats import SSD, DevicePreset, IOStats
 from repro.core.transition import Node2vec, WalkTask
 from repro.core.walk import WalkBatch
-from repro.io import BlockStore, WalkPool, make_walk_pool
+from repro.io import AsyncWalkPool, BlockStore, WalkPool, make_walk_pool
 
 from .step import VID_PAD, advance_pair, pow2_pad, remap_search_iters
 
@@ -197,6 +197,8 @@ class EngineBase:
         prefetch: bool = True,
         block_cache_blocks: int = 4,
         seed: Optional[int] = None,
+        async_pipeline: bool = False,
+        writer_queue: int = 64,
     ):
         self.bg = bg
         self.task = task
@@ -228,7 +230,11 @@ class EngineBase:
         )
         if record_walks:
             self.corpus[:, 0] = src
-        # the storage layer: walk pool ("disk" tier) + block store
+        # the storage layer: walk pool ("disk" tier) + block store; with the
+        # async pipeline the pool persists through a sequenced writer thread
+        # (ticketed pushes — serial state sequence, off the critical path)
+        self.async_pipeline = bool(async_pipeline)
+        self.writer_queue = writer_queue
         self.pool: WalkPool = make_walk_pool(
             pool,
             num_blocks=bg.num_blocks,
@@ -237,6 +243,8 @@ class EngineBase:
             flush_walks=pool_flush_walks,
             directory=pool_dir,
         )
+        if self.async_pipeline and not isinstance(self.pool, AsyncWalkPool):
+            self.pool = AsyncWalkPool(self.pool, stats=self.stats, max_queue=writer_queue)
         self.blocks = BlockStore(
             bg,
             self.stats,

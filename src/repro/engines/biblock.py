@@ -10,25 +10,33 @@ so the device footprint of an on-demand bucket is ``O(activated vertices)``
 (``IOStats.peak_resident_bytes`` is the gauge).  Walks that reach a
 non-activated vertex mid-advance pause; their rows are gathered and
 *appended* to the view (never a re-materialisation) and the advance
-resumes.  The triangular schedule knows the next ancillary bucket before
-the current one finishes, so the store prefetches its view — full or
-partial — under the jitted advance call.
+resumes.
+
+Since the staged pipeline refactor the run is organised by a
+:class:`~repro.core.scheduler.TimeSlotPlan` and a
+:class:`~repro.engines.pipeline.BucketPipeline`: while one bucket advances
+on the device, the walk-pool writer thread applies persists and drains +
+splits the *next* slot's pool, and the block-store prefetch thread builds
+the next slot's current view and the next bucket's ancillary view.  With
+``async_pipeline=False`` (the serial reference mode) every stage runs
+inline; the counter-based per-walk RNG makes the two modes bit-identical.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 
-from repro.core.buckets import split_into_buckets
 from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.loader import BlockLoadingModel
+from repro.core.scheduler import TimeSlotPlan
 from repro.core.stats import SSD, DevicePreset
 from repro.core.transition import WalkTask
 from repro.core.walk import WalkBatch
 
 from .base import EngineBase, WalkResult
+from .pipeline import BucketCursor, BucketPipeline
 
 __all__ = ["BiBlockEngine"]
 
@@ -45,9 +53,19 @@ class BiBlockEngine(EngineBase):
         bucket_extending: bool = True,
         preset: DevicePreset = SSD,
         record_walks: bool = False,
+        async_pipeline: bool = True,
+        writer_queue: int = 64,
         **kw,
     ):
-        super().__init__(bg, task, preset=preset, record_walks=record_walks, **kw)
+        super().__init__(
+            bg,
+            task,
+            preset=preset,
+            record_walks=record_walks,
+            async_pipeline=async_pipeline,
+            writer_queue=writer_queue,
+            **kw,
+        )
         self.loader = BlockLoadingModel(bg.num_blocks, mode=loading)
         self.bucket_extending = bucket_extending
 
@@ -101,18 +119,18 @@ class BiBlockEngine(EngineBase):
             self.stats.ondemand_load(n_act, nbytes)
         return decision, eta, cost, view
 
-    def _prefetch_bucket(self, i: int, bucket: WalkBatch, n_walks: int) -> None:
+    def _schedule_bucket_view(self, i: int, bucket: WalkBatch) -> None:
         """Overlap the next bucket's view build with this bucket's advance.
         The tentative decision mirrors :meth:`_load_ancillary`'s (``choose``
         is pure); a mismatch — or a bucket grown by Alg. 2 extension in the
         meantime — just misses the prefetch cache and builds synchronously.
         """
         nv = int(self.bg.block_nverts[i])
-        if self.loader.choose(i, n_walks, nv) == "full":
-            self.blocks.prefetch(i)
+        if self.loader.choose(i, len(bucket), nv) == "full":
+            self.blocks.schedule([("full", i)])
         else:
             s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-            self.blocks.prefetch_partial(i, self._bucket_activated(bucket, s, e))
+            self.blocks.schedule([("partial", i, self._bucket_activated(bucket, s, e))])
 
     def _advance_on_view(
         self,
@@ -155,112 +173,102 @@ class BiBlockEngine(EngineBase):
         return batch, alive, cost
 
     def _run(self) -> WalkResult:
-        if self.order == 1:
-            return self._run_first_order()
+        """The staged slot loop, shared by first- and second-order tasks:
+        the :class:`TimeSlotPlan` names the slots, the
+        :class:`BucketPipeline` overlaps the next slot's pool drain + bucket
+        split and the next views with the current advance (or runs
+        everything inline when ``async_pipeline=False``)."""
         self._initialize()
-        NB = self.bg.num_blocks
+        plan = TimeSlotPlan(self.bg.num_blocks, self.order)
+        pipe = BucketPipeline(
+            pool=self.pool,
+            blocks=self.blocks,
+            block_starts=self.bg.block_starts,
+            stats=self.stats,
+            plan=plan,
+            enabled=self.async_pipeline,
+        )
         guard = 0
         while self.unfinished > 0:
             guard += 1
-            if guard > self.task.length * NB + 10:
+            if guard > self.task.length * self.bg.num_blocks + 10:
                 raise RuntimeError("engine failed to converge (bug)")
             self.stats.supersteps += 1
-            for b in range(NB - 1):
-                if self.pool.counts[b] == 0:
+            for b in plan.slots():
+                if not pipe.slot_has_walks(b):
                     continue
-                batch, wid = self.pool.load(b)
                 self.stats.time_slots += 1
-                cur_view = self.blocks.get_view(b, sequential=True)
-                self.pair.set_slot(0, cur_view)
-                # wid-aligned buckets: pending maps bucket id -> (batch, wid)
-                pending: Dict[int, Tuple[WalkBatch, np.ndarray]] = split_into_buckets(
-                    self.bg.block_starts, batch, b, wid
-                )
-                i = b  # ancillary cursor: strictly increasing (triangular)
-                while True:
-                    remaining = sorted(k for k in pending if k > i)
-                    if not remaining:
-                        break
-                    i = remaining[0]
-                    # the schedule already knows the next ancillary bucket:
-                    # overlap its view build with this bucket's advance
-                    if len(remaining) > 1:
-                        nxt = remaining[1]
-                        nxt_bucket, _ = pending[nxt]
-                        self._prefetch_bucket(nxt, nxt_bucket, len(nxt_bucket))
-                    bucket, bwid = pending.pop(i)
-                    self.stats.bucket_executions += 1
-                    s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
-                    activated = self._bucket_activated(bucket, s, e)
-                    decision, eta, cost, view = self._load_ancillary(i, len(bucket), activated)
-                    self.pair.set_slot(1, view)
-                    steps_before = self.stats.steps_sampled
-                    bucket, alive, ext_cost = self._advance_on_view(i, bucket, bwid, view, decision)
-                    cost += ext_cost
-                    cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
-                    self.loader.observe(i, eta, cost, decision)
-                    bucket, bwid = self._retire(bucket, bwid, alive)
-                    if len(bucket) == 0:
-                        continue
-                    # Alg. 2 routing
-                    pre_blk = block_of(self.bg.block_starts, bucket.prev)
-                    cur_blk = block_of(self.bg.block_starts, bucket.cur)
-                    extend = (
-                        (cur_blk > i) & (pre_blk == b)
-                        if self.bucket_extending
-                        else np.zeros(len(bucket), bool)
-                    )
-                    # persist the non-extending walks with min-rule
-                    self._persist(bucket.select(~extend), bwid[~extend])
-                    if extend.any():
-                        ext_batch = bucket.select(extend)
-                        ext_wid = bwid[extend]
-                        for nb in np.unique(cur_blk[extend]):
-                            m = cur_blk[extend] == nb
-                            nb = int(nb)
-                            if nb in pending:
-                                pb, pw = pending[nb]
-                                pending[nb] = (
-                                    WalkBatch.concat([pb, ext_batch.select(m)]),
-                                    np.concatenate([pw, ext_wid[m]]),
-                                )
-                            else:
-                                pending[nb] = (ext_batch.select(m), ext_wid[m])
+                if self.order == 1:
+                    self._run_slot_first_order(b, pipe)
+                else:
+                    self._run_slot(b, pipe)
+        pipe.finish()
         return self.result(loader_summary=self.loader.summary())
 
-    def _run_first_order(self) -> WalkResult:
+    def _run_slot(self, b: int, pipe: BucketPipeline) -> None:
+        """One second-order time slot: current block ``b`` resident in slot
+        0, ancillary buckets through the ordered cursor in slot 1."""
+        cursor: BucketCursor = pipe.acquire_slot(b)
+        pipe.preload_slot(pipe.plan_next(b))
+        cur_view = self.blocks.get_view(b, sequential=True)
+        self.pair.set_slot(0, cur_view)
+        while True:
+            item = cursor.pop()
+            if item is None:
+                break
+            i, bucket, bwid = item
+            # the schedule already knows the next ancillary bucket:
+            # overlap its view build with this bucket's advance
+            nxt = cursor.peek()
+            if nxt is not None:
+                self._schedule_bucket_view(nxt, cursor.get(nxt)[0])
+            self.stats.bucket_executions += 1
+            s, e = self.bg.block_starts[i], self.bg.block_starts[i + 1]
+            activated = self._bucket_activated(bucket, s, e)
+            decision, eta, cost, view = self._load_ancillary(i, len(bucket), activated)
+            self.pair.set_slot(1, view)
+            steps_before = self.stats.steps_sampled
+            bucket, alive, ext_cost = self._advance_on_view(i, bucket, bwid, view, decision)
+            cost += ext_cost
+            cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
+            self.loader.observe(i, eta, cost, decision)
+            bucket, bwid = self._retire(bucket, bwid, alive)
+            if len(bucket) == 0:
+                continue
+            # Alg. 2 routing
+            pre_blk = block_of(self.bg.block_starts, bucket.prev)
+            cur_blk = block_of(self.bg.block_starts, bucket.cur)
+            extend = (
+                (cur_blk > i) & (pre_blk == b)
+                if self.bucket_extending
+                else np.zeros(len(bucket), bool)
+            )
+            # persist the non-extending walks with min-rule
+            self._persist(bucket.select(~extend), bwid[~extend])
+            if extend.any():
+                ext_batch = bucket.select(extend)
+                ext_wid = bwid[extend]
+                ext_blk = cur_blk[extend]
+                for nb in np.unique(ext_blk):
+                    m = ext_blk == nb
+                    cursor.add(int(nb), ext_batch.select(m), ext_wid[m])
+
+    def _run_slot_first_order(self, b: int, pipe: BucketPipeline) -> None:
         """§7.8: first-order walks need only the current block; iteration
         scheduling + the learning-based loader on the current block itself
         ("heavy block loads become light vertex I/Os once few walks remain").
         Both slots hold the *same* view — an on-demand slot is a compacted
         view over just the walks' current vertices."""
-        self._initialize()
-        NB = self.bg.num_blocks
-        guard = 0
-        while self.unfinished > 0:
-            guard += 1
-            if guard > self.task.length * NB + 10:
-                raise RuntimeError("engine failed to converge (bug)")
-            self.stats.supersteps += 1
-            for b in range(NB):
-                if self.pool.counts[b] == 0:
-                    continue
-                batch, wid = self.pool.load(b)
-                self.stats.time_slots += 1
-                self.stats.bucket_executions += 1
-                activated = batch.cur
-                decision, eta, cost, view = self._load_ancillary(b, len(batch), activated)
-                self.pair.set_slot(0, view)
-                self.pair.set_slot(1, view)
-                # iteration order makes the next current block predictable
-                nxt = next((j for j in range(b + 1, NB) if self.pool.counts[j] > 0), None)
-                if nxt is not None:
-                    self.blocks.prefetch(nxt)
-                steps_before = self.stats.steps_sampled
-                batch, alive, ext_cost = self._advance_on_view(b, batch, wid, view, decision)
-                cost += ext_cost
-                cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
-                self.loader.observe(b, eta, cost, decision)
-                batch, wid = self._retire(batch, wid, alive)
-                self._persist(batch, wid)
-        return self.result(loader_summary=self.loader.summary())
+        batch, wid = pipe.acquire_slot(b)
+        pipe.preload_slot(pipe.plan_next(b))
+        self.stats.bucket_executions += 1
+        decision, eta, cost, view = self._load_ancillary(b, len(batch), batch.cur)
+        self.pair.set_slot(0, view)
+        self.pair.set_slot(1, view)
+        steps_before = self.stats.steps_sampled
+        batch, alive, ext_cost = self._advance_on_view(b, batch, wid, view, decision)
+        cost += ext_cost
+        cost += self.STEP_COST * (self.stats.steps_sampled - steps_before)
+        self.loader.observe(b, eta, cost, decision)
+        batch, wid = self._retire(batch, wid, alive)
+        self._persist(batch, wid)

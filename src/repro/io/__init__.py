@@ -19,9 +19,10 @@ from .blockfile import (
     write_block_file,
 )
 from .blockstore import BlockStore
-from .walkpool import DiskWalkPool, MemoryWalkPool, WalkPool, make_walk_pool
+from .walkpool import AsyncWalkPool, DiskWalkPool, MemoryWalkPool, WalkPool, make_walk_pool
 
 __all__ = [
+    "AsyncWalkPool",
     "BLOCK_FILE_NAME",
     "BlockFileError",
     "BlockStore",

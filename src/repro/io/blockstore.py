@@ -118,6 +118,24 @@ class BlockStore:
         return self._executor.submit(fn, *args)
 
     # -- the engine-facing API -------------------------------------------------
+    def schedule(self, ops) -> None:
+        """Schedule a batch of prefetches from a pipeline plan.
+
+        ``ops`` is an iterable of ``("full", b)`` / ``("partial", b,
+        vertices)`` tuples — the :class:`repro.engines.pipeline
+        .BucketPipeline` derives them from the
+        :class:`~repro.core.scheduler.TimeSlotPlan` (next slot's current
+        block, next bucket's ancillary view) instead of issuing one-off
+        calls.  Never charges; a no-op when prefetch is disabled.
+        """
+        for op in ops:
+            if op[0] == "full":
+                self.prefetch(op[1])
+            elif op[0] == "partial":
+                self.prefetch_partial(op[1], op[2])
+            else:
+                raise ValueError(f"unknown prefetch op {op[0]!r}; have full, partial")
+
     def prefetch(self, b: int) -> None:
         """Start materialising block ``b`` in the background (no charge)."""
         if not self.enable_prefetch:
@@ -139,12 +157,12 @@ class BlockStore:
             return
         b = int(b)
         with self._lock:
-            fut = self._pfutures.get(b)
-            if fut is not None and not fut.done():
-                return  # a build is in flight; don't queue duplicates
-            # a finished-but-unconsumed future is stale (its bucket chose a
-            # full load after all) — replace it so later prefetches aren't
-            # blocked forever and partial_view never pops a dead prediction
+            # always replace the pending prediction: an unconsumed one is
+            # stale (its bucket chose a full load after all), and keeping an
+            # in-flight one only when it is still running would make which
+            # prediction partial_view sees — and the overlapped_load_bytes
+            # it counts — depend on prefetch-thread timing.  The superseded
+            # build finishes in the background and is dropped.
             self._pfutures[b] = self._submit(self._build_partial, b, np.asarray(vertices))
             self.partial_prefetch_issued += 1
 
@@ -164,6 +182,8 @@ class BlockStore:
             blk = fut.result()
             self.prefetch_wait_time += time.perf_counter() - t0
             self.prefetch_hits += 1
+            # the materialisation ran off the critical path — measure the win
+            self.stats.note_overlapped(blk.nbytes_full())
         elif blk is not None:
             self.cache_hits += 1
         else:
@@ -205,6 +225,7 @@ class BlockStore:
             in_req = np.isin(base.vids, vs)
             if in_req.all():
                 self.partial_prefetch_hits += 1
+                self.stats.note_overlapped(self.bg.activated_load_bytes(base.vids))
                 missing = vs[~base.has_vertices(vs)]
                 if missing.size:
                     base = self.extend_view(base, missing)

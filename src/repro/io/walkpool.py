@@ -29,14 +29,23 @@ from __future__ import annotations
 
 import os
 import tempfile
-from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
 from repro.core.stats import IOStats
 from repro.core.walk import WALK_BYTES, WalkBatch, pack_walks, unpack_walks
 
-__all__ = ["WalkPool", "MemoryWalkPool", "DiskWalkPool", "make_walk_pool"]
+__all__ = [
+    "WalkPool",
+    "MemoryWalkPool",
+    "DiskWalkPool",
+    "AsyncWalkPool",
+    "make_walk_pool",
+]
 
 _WID_BYTES = 8
 
@@ -242,6 +251,193 @@ class DiskWalkPool(_PoolBase):
         if self._tmpdir is not None:
             self._tmpdir.cleanup()
             self._tmpdir = None
+
+
+class AsyncWalkPool:
+    """Sequenced async persist path over any :class:`WalkPool` backend.
+
+    Wraps a base pool with a single *writer thread* draining a bounded FIFO
+    job queue.  Every ``push`` is assigned a monotonically-increasing ticket
+    and enqueued; the writer applies jobs strictly in ticket order, so the
+    base pool steps through **exactly** the state sequence a serial engine
+    issuing the same op sequence would have produced — same buffer
+    contents, same spill points, same charged walk I/O — just off the
+    caller's critical path.
+
+    ``drain_async`` is the pipeline's preload primitive: the drain job rides
+    the same FIFO, so it observes precisely the pushes enqueued *before* it
+    in program order (a deterministic prefix — no racy snapshot), loads the
+    pool on the writer thread (optionally running a ``transform`` such as
+    bucket splitting there too) and resolves a future with
+    ``(payload, n_walks, n_spilled)``.  Because a pool preserves push order
+    and a drain consumes a prefix, ``prefix-drain + later remainder-drain``
+    concatenates to what one serial ``load`` at slot start would return —
+    the *walks* are identical.  The walk-I/O *charges* are deterministic
+    and backend-invariant but follow the drain points: a preload drains the
+    write buffer earlier than a slot-start ``load`` would, so a
+    flush-threshold crossing that straddles the preload point can spill in
+    one mode and not the other — ``walk_bytes_written/read`` legitimately
+    differ between the async pipeline and the no-preload serial reference
+    (block and on-demand charges never do).
+
+    ``counts``/``min_hop`` are tracked *eagerly* on the caller's thread
+    (updated at enqueue time), so schedulers see the same sequential view of
+    pending walks as with a raw pool.
+
+    A writer-thread exception is latched: every queued and subsequent
+    operation (``push``/``load``/``flush``/``barrier``) re-raises it on the
+    calling thread, so a failed spill propagates out of ``Engine.run()``.
+    ``close`` never raises and never hangs: it wakes the writer, lets it
+    drain the queue (failing pending futures once an error is latched) and
+    joins it before closing the base pool.  Idempotent.
+    """
+
+    def __init__(self, base: WalkPool, stats: Optional[IOStats] = None, max_queue: int = 64):
+        self.base = base
+        self.stats = stats
+        self.max_queue = max(int(max_queue), 1)
+        self.num_blocks = base.num_blocks
+        #: eager sequential view — the base arrays lag by the queue contents
+        self.counts = base.counts.copy()
+        self.min_hop = base.min_hop.copy()
+        self.tickets_issued = 0
+        self.applied_ticket = 0
+        #: pool-local high-water copy of ``IOStats.writer_queue_peak`` for
+        #: stats-less construction; both update from the same _enqueue line
+        self.queue_peak = 0
+        self._q: deque = deque()
+        self._cv = threading.Condition()
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self._worker = threading.Thread(
+            target=self._run_worker, name="walkpool-writer", daemon=True
+        )
+        self._worker.start()
+
+    @property
+    def backend(self) -> str:
+        return self.base.backend
+
+    def __getattr__(self, name):
+        # forward backend extras (e.g. DiskWalkPool.bytes_written/on_disk_bytes)
+        return getattr(self.base, name)
+
+    # -- writer thread --------------------------------------------------------
+    def _run_worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._q and not self._closed:
+                    self._cv.wait()
+                if not self._q:
+                    return  # closed and fully drained
+                job = self._q.popleft()
+                self._cv.notify_all()  # wake producers blocked on a full queue
+            self._apply(job)
+
+    def _apply(self, job) -> None:
+        kind, fut = job[0], job[-1]
+        if self._error is not None:
+            if fut is not None:
+                fut.set_exception(self._error)
+            return
+        try:
+            if kind == "push":
+                _, ticket, b, batch, wid, _ = job
+                self.base.push(b, batch, wid)
+                self.applied_ticket = ticket
+            elif kind == "drain":
+                _, b, transform, fut = job
+                n_spilled = self.base._spilled_count(b)
+                batch, wid = self.base.load(b)
+                payload = transform(batch, wid) if transform is not None else (batch, wid)
+                fut.set_result((payload, len(batch), n_spilled))
+            elif kind == "flush":
+                _, b, fut = job
+                self.base.flush(b)
+                fut.set_result(None)
+            else:  # barrier
+                fut.set_result(None)
+        except BaseException as e:  # latch and surface on the calling thread
+            self._error = e
+            if fut is not None and not fut.done():
+                fut.set_exception(e)
+            with self._cv:
+                self._cv.notify_all()
+
+    # -- producer side --------------------------------------------------------
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("walk-pool writer thread failed") from self._error
+
+    def _enqueue(self, job) -> None:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("AsyncWalkPool is closed")
+            self._q.append(job)
+            self.queue_peak = max(self.queue_peak, len(self._q))
+            if self.stats is not None:
+                self.stats.note_writer_queue(len(self._q))
+            self._cv.notify_all()
+
+    def push(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        if len(batch) == 0:
+            return
+        self._raise_if_failed()
+        with self._cv:
+            while len(self._q) >= self.max_queue and self._error is None and not self._closed:
+                self._cv.wait()
+        self._raise_if_failed()
+        self.tickets_issued += 1
+        self._enqueue(("push", self.tickets_issued, int(b), batch, wid, None))
+        self.counts[b] += len(batch)
+        self.min_hop[b] = min(self.min_hop[b], float(batch.hop.min()))
+
+    def drain_async(
+        self,
+        b: int,
+        transform: Optional[Callable[[WalkBatch, np.ndarray], object]] = None,
+    ) -> Future:
+        """Enqueue a prefix drain of pool ``b``; resolves to
+        ``(payload, n_walks, n_spilled)`` where ``payload`` is
+        ``transform(batch, wid)`` (or the raw pair)."""
+        fut: Future = Future()
+        self._enqueue(("drain", int(b), transform, fut))
+        self.counts[b] = 0
+        self.min_hop[b] = np.inf
+        return fut
+
+    def load(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        payload, _, _ = self.drain_async(b).result()
+        return payload
+
+    def peek(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        """Inspect pool ``b`` after the queue settles (tests/debug; does not
+        see batches already handed out by :meth:`drain_async`)."""
+        self.barrier()
+        return self.base.peek(b)
+
+    def flush(self, b: Optional[int] = None) -> None:
+        fut: Future = Future()
+        self._enqueue(("flush", b, fut))
+        fut.result()
+
+    def barrier(self) -> None:
+        """Block until every enqueued job has been applied; re-raises a
+        latched writer error."""
+        with self._cv:
+            closed = self._closed
+        if not closed:
+            fut: Future = Future()
+            self._enqueue(("barrier", fut))
+            fut.result()
+        self._raise_if_failed()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._worker.join()
+        self.base.close()
 
 
 def make_walk_pool(

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.walk --task rwnv --vertices 5000 \
         --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25] \
-        [--graph-backend disk --graph-dir /path/to/dir] [--pool disk]
+        [--graph-backend disk --graph-dir /path/to/dir] [--pool disk] \
+        [--no-async-pipeline] [--writer-queue 64]
 
 Prints the paper's headline statistics (block/vertex/on-demand I/Os,
 simulated I/O + exec time) as one CSV row per engine.
@@ -16,8 +17,12 @@ import argparse
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", choices=("rwnv", "prnv", "deepwalk"), default="rwnv")
-    ap.add_argument("--engine", action="append", default=None,
-                    choices=("biblock", "pb", "sogw", "sgsc", "oracle"))
+    ap.add_argument(
+        "--engine",
+        action="append",
+        default=None,
+        choices=("biblock", "pb", "sogw", "sgsc", "oracle"),
+    )
     ap.add_argument("--vertices", type=int, default=5000)
     ap.add_argument("--avg-degree", type=int, default=16)
     ap.add_argument("--blocks", type=int, default=8)
@@ -27,20 +32,51 @@ def main():
     ap.add_argument("--q", type=float, default=1.0)
     ap.add_argument("--query", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--loading", default="auto",
-                    choices=("auto", "full", "ondemand"))
-    ap.add_argument("--pool", default="memory", choices=("memory", "disk"),
-                    help="walk-pool backend (repro.io)")
-    ap.add_argument("--pool-flush-walks", type=int, default=1 << 18,
-                    help="walk-pool spill threshold")
-    ap.add_argument("--no-prefetch", action="store_true",
-                    help="disable BlockStore background prefetch")
-    ap.add_argument("--graph-backend", default="ram", choices=("ram", "disk"),
-                    help="where graph blocks live: host RAM or the packed "
-                         "on-disk container (repro.io.blockfile)")
-    ap.add_argument("--graph-dir", default=None,
-                    help="directory for the packed block file "
-                         "(disk backend; default: a fresh temp dir)")
+    ap.add_argument("--loading", default="auto", choices=("auto", "full", "ondemand"))
+    ap.add_argument(
+        "--pool",
+        default="memory",
+        choices=("memory", "disk"),
+        help="walk-pool backend (repro.io)",
+    )
+    ap.add_argument(
+        "--pool-flush-walks",
+        type=int,
+        default=1 << 18,
+        help="walk-pool spill threshold",
+    )
+    ap.add_argument(
+        "--no-prefetch",
+        action="store_true",
+        help="disable BlockStore background prefetch",
+    )
+    ap.add_argument(
+        "--no-async-pipeline",
+        action="store_true",
+        help="run the bi-block engine in the serial reference mode: no "
+        "walk-pool writer thread, no next-slot preloads (bit-identical "
+        "results, every pool load on the critical path)",
+    )
+    ap.add_argument(
+        "--writer-queue",
+        type=int,
+        default=64,
+        help="bounded depth of the async walk-pool writer queue "
+        "(bi-block engine; ignored with --no-async-pipeline)",
+    )
+    ap.add_argument(
+        "--graph-backend",
+        default="ram",
+        choices=("ram", "disk"),
+        help="where graph blocks live: host RAM or the packed "
+        "on-disk container (repro.io.blockfile)",
+    )
+    ap.add_argument(
+        "--graph-dir",
+        default=None,
+        help="directory for the packed block file "
+        "(disk backend; default: a fresh temp dir)",
+    )
     args = ap.parse_args()
 
     from repro.core import (
@@ -55,8 +91,7 @@ def main():
         rwnv_task,
     )
 
-    g = erdos_renyi(args.vertices, args.vertices * args.avg_degree // 2,
-                    seed=args.seed)
+    g = erdos_renyi(args.vertices, args.vertices * args.avg_degree // 2, seed=args.seed)
     bg_ram = partition_into_n_blocks(g, args.blocks)
     if args.graph_backend == "disk":
         from repro.io import write_and_open
@@ -67,24 +102,40 @@ def main():
     else:
         bg = bg_ram
     if args.task == "rwnv":
-        task = rwnv_task(p=args.p, q=args.q,
-                         walks_per_vertex=args.walks_per_vertex,
-                         length=args.length, seed=args.seed)
+        task = rwnv_task(
+            p=args.p,
+            q=args.q,
+            walks_per_vertex=args.walks_per_vertex,
+            length=args.length,
+            seed=args.seed,
+        )
     elif args.task == "prnv":
-        task = prnv_task(args.query, g.num_vertices, p=args.p, q=args.q,
-                         seed=args.seed)
+        task = prnv_task(args.query, g.num_vertices, p=args.p, q=args.q, seed=args.seed)
     else:
-        task = deepwalk_task(walks_per_vertex=args.walks_per_vertex,
-                             length=args.length, seed=args.seed)
+        task = deepwalk_task(
+            walks_per_vertex=args.walks_per_vertex, length=args.length, seed=args.seed
+        )
 
-    pool_kw = dict(pool=args.pool, pool_flush_walks=args.pool_flush_walks,
-                   prefetch=not args.no_prefetch)
+    pool_kw = dict(
+        pool=args.pool,
+        pool_flush_walks=args.pool_flush_walks,
+        prefetch=not args.no_prefetch,
+    )
+    biblock_kw = dict(
+        pool_kw,
+        loading=args.loading,
+        async_pipeline=not args.no_async_pipeline,
+        writer_queue=args.writer_queue,
+    )
     engines = args.engine or ["biblock", "sogw"]
-    print("engine,block_ios,vertex_ios,ondemand_ios,walk_bytes_written,"
-          "peak_resident_bytes,prefetch_hits,sim_io_s,exec_s,sim_wall_s")
+    print(
+        "engine,block_ios,vertex_ios,ondemand_ios,walk_bytes_written,"
+        "peak_resident_bytes,prefetch_hits,overlapped_load_bytes,"
+        "pipeline_stall_slots,writer_queue_peak,sim_io_s,exec_s,sim_wall_s"
+    )
     for name in engines:
         if name == "biblock":
-            res = BiBlockEngine(bg, task, loading=args.loading, **pool_kw).run()
+            res = BiBlockEngine(bg, task, **biblock_kw).run()
         elif name == "pb":
             res = PlainBucketEngine(bg, task, **pool_kw).run()
         elif name == "sogw":
@@ -96,9 +147,13 @@ def main():
             res = InMemoryWalker(bg_ram, task).run(record_walks=False)
         s = res.stats
         hits = (res.block_store_counters or {}).get("prefetch_hits", 0)
-        print(f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
-              f"{s.walk_bytes_written},{s.peak_resident_bytes},{hits},"
-              f"{s.sim_io_time:.4f},{s.exec_time:.4f},{s.sim_wall_time:.4f}")
+        print(
+            f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
+            f"{s.walk_bytes_written},{s.peak_resident_bytes},{hits},"
+            f"{s.overlapped_load_bytes},{s.pipeline_stall_slots},"
+            f"{s.writer_queue_peak},"
+            f"{s.sim_io_time:.4f},{s.exec_time:.4f},{s.sim_wall_time:.4f}"
+        )
 
 
 if __name__ == "__main__":
