@@ -501,6 +501,78 @@ def pipeline_overlap() -> list[str]:
     ]
 
 
+def sharded_pool() -> list[str]:
+    """Sharded walk pools: the PR-4 sequenced writer generalised to one
+    writer per keyspace shard.
+
+    Runs the same RWNV workload with ``pool_shards`` in {1, 2, 4, 8} (1 ==
+    the single AsyncWalkPool writer) and *asserts*
+
+    * the walks are bit-identical (endpoint histogram CRC) at every shard
+      count,
+    * the deterministic I/O charges — block, on-demand, AND walk spill
+      bytes — are invariant across shard counts (a block's op stream lands
+      on exactly one shard in program order, so its spill points cannot
+      move),
+    * with >= 2 shards the spills really were partitioned: the per-shard
+      breakdown ``IOStats.shard_spill_bytes`` names >= 2 shards and sums
+      to ``walk_bytes_written`` exactly, and
+    * the breakdown (and the ``shard_imbalance`` gauge) is deterministic —
+      a repeat run reproduces it bit-for-bit.  No timing-dependent
+      quantity (queue peaks, thread interleavings) is part of any
+      asserted signature.
+    """
+    g = _default_graph()
+    bg = _partition(g, N_BLOCKS)
+    task = rwnv_task(walks_per_vertex=WALKS_PV, length=LENGTH, seed=13)
+    # a low flush threshold makes every pool-owning block spill, so the
+    # per-shard breakdown has real bytes to partition
+    kw: Dict[str, object] = dict(POOL_KW, pool_flush_walks=64)
+    BiBlockEngine(bg, task, **kw).run()  # warm the jit cache off the clock
+    rows, base_sig = [], None
+    for shards in (1, 2, 4, 8):
+        res = BiBlockEngine(bg, task, pool_shards=shards, **kw).run()
+        s = res.stats
+        crc = zlib.crc32(np.ascontiguousarray(res.endpoint_counts).tobytes())
+        sig = (
+            crc, s.steps_sampled, s.block_ios, s.block_bytes,
+            s.ondemand_ios, s.ondemand_bytes,
+            s.walk_bytes_written, s.walk_bytes_read,
+        )
+        if base_sig is None:
+            base_sig = sig
+        assert sig == base_sig, (
+            f"sharding changed the walks or charges at pool_shards={shards}: "
+            f"{sig} != {base_sig}"
+        )
+        spills = dict(s.shard_spill_bytes)
+        if shards >= 2:
+            assert len(spills) >= 2, (
+                f"pool_shards={shards} spilled through {len(spills)} shard "
+                f"writer(s) — no real partition of the persist path"
+            )
+            assert sum(spills.values()) == s.walk_bytes_written, (
+                f"per-shard spill breakdown {spills} does not sum to "
+                f"walk_bytes_written={s.walk_bytes_written}"
+            )
+            again = BiBlockEngine(bg, task, pool_shards=shards, **kw).run().stats
+            assert dict(again.shard_spill_bytes) == spills, (
+                f"shard spill breakdown is not deterministic: "
+                f"{dict(again.shard_spill_bytes)} != {spills}"
+            )
+            assert again.shard_imbalance == s.shard_imbalance, (
+                f"shard_imbalance is not deterministic: "
+                f"{again.shard_imbalance} != {s.shard_imbalance}"
+            )
+        rows.append(_row(
+            f"sharded_pool_{shards}", _us_per_step(res),
+            f"endpoint_crc={crc:#010x};walk_bytes_written={s.walk_bytes_written};"
+            f"spill_shards={len(spills)};shard_imbalance={s.shard_imbalance:.3f};"
+            f"overlapped_load_bytes={s.overlapped_load_bytes}",
+        ))
+    return rows
+
+
 ALL: Dict[str, Callable[[], list[str]]] = {
     "fig1_profile": fig1_profile,
     "table3_engines": table3_engines,
@@ -513,6 +585,7 @@ ALL: Dict[str, Callable[[], list[str]]] = {
     "ondemand_exec": ondemand_exec,
     "backend_matrix": backend_matrix,
     "pipeline_overlap": pipeline_overlap,
+    "sharded_pool": sharded_pool,
 }
 
 

@@ -64,6 +64,7 @@ _LAZY = {
     "write_and_open": "repro.io",
     "DiskWalkPool": "repro.io",
     "MemoryWalkPool": "repro.io",
+    "ShardedWalkPool": "repro.io",
     "WalkPool": "repro.io",
     "make_walk_pool": "repro.io",
 }
@@ -81,7 +82,8 @@ def __dir__():
 
 __all__ = [
     "BiBlockEngine", "EngineBase", "InMemoryWalker", "PlainBucketEngine",
-    "SOGWEngine", "BlockStore", "DiskWalkPool", "MemoryWalkPool", "WalkPool",
+    "SOGWEngine", "BlockStore", "DiskWalkPool", "MemoryWalkPool",
+    "ShardedWalkPool", "WalkPool",
     "make_walk_pool", "BlockFileError", "DiskBlockedGraph", "write_block_file",
     "write_and_open",
     "WalkResult", "advance_pair", "BlockedGraph", "CSRGraph", "ResidentBlock",

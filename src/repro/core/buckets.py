@@ -25,6 +25,7 @@ __all__ = [
     "skewed_block_assignment",
     "traditional_block_assignment",
     "bucket_ids",
+    "push_by_block_assignment",
     "split_into_buckets",
 ]
 
@@ -39,6 +40,23 @@ def skewed_block_assignment(block_starts: np.ndarray, batch: WalkBatch) -> np.nd
 def traditional_block_assignment(block_starts: np.ndarray, batch: WalkBatch) -> np.ndarray:
     """Traditional storage (baselines): a walk lives with B(cur)."""
     return block_of(block_starts, batch.cur)
+
+
+def push_by_block_assignment(pool, block_starts, order: int, batch: WalkBatch, wid) -> None:
+    """Persist ``batch`` through ``pool`` under the walk-storage rule —
+    skewed ``min(B(u), B(v))`` for second order, traditional ``B(cur)``
+    for first (§7.8).  The single association every tier persists with:
+    the bi-block engine and the distributed driver both call this, so the
+    keying cannot silently diverge between them."""
+    if len(batch) == 0:
+        return
+    if order == 1:
+        assoc = traditional_block_assignment(block_starts, batch)
+    else:
+        assoc = skewed_block_assignment(block_starts, batch)
+    for b in np.unique(assoc):
+        m = assoc == b
+        pool.push(int(b), batch.select(m), wid[m])
 
 
 def bucket_ids(block_starts: np.ndarray, batch: WalkBatch, current_block: int) -> np.ndarray:

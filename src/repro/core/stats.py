@@ -10,6 +10,7 @@ and the TPU regime the system targets (HBM / ICI), which share that shape.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import defaultdict
 
@@ -45,6 +46,9 @@ class IOStats:
 
     def __init__(self, preset: DevicePreset = SSD):
         self.preset = preset
+        # walk_io is the one counter path hit from multiple writer threads
+        # (one per pool shard); everything else stays single-producer
+        self._walk_lock = threading.Lock()
         self.reset()
 
     def reset(self) -> None:
@@ -62,6 +66,8 @@ class IOStats:
         self.overlapped_load_bytes = 0
         self.pipeline_stall_slots = 0
         self.writer_queue_peak = 0
+        self.shard_spill_bytes: dict = {}
+        self.shard_imbalance = 0.0
         self.time_slots = 0
         self.supersteps = 0
         self.steps_sampled = 0
@@ -69,7 +75,6 @@ class IOStats:
         self.sim_block_io_time = 0.0
         self.sim_vertex_io_time = 0.0
         self.sim_ondemand_io_time = 0.0
-        self.sim_walk_io_time = 0.0
         self.exec_time = 0.0  # wall time inside walk updating
         self.wall_start = time.perf_counter()
         self.per_block_loads = defaultdict(int)
@@ -121,23 +126,54 @@ class IOStats:
         """Gauge: walk-pool writer queue depth; keeps the high-water mark."""
         self.writer_queue_peak = max(self.writer_queue_peak, int(depth))
 
-    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16, kind: str = "write") -> None:
+    def note_shard_imbalance(self, value: float) -> None:
+        """Gauge: max-over-mean ratio of walks pushed per pool shard.
+
+        Updated at every (program-ordered) push, so the value — like the
+        per-shard breakdown in ``shard_spill_bytes`` — is deterministic: it
+        reflects how the keyspace hash distributed the final push totals,
+        never thread timing."""
+        self.shard_imbalance = float(value)
+
+    def walk_io(
+        self,
+        n_walks: int,
+        *,
+        bytes_per_walk: int = 16,
+        kind: str = "write",
+        shard: int | None = None,
+    ) -> None:
         """Walk pool flush/load: 128-bit encoded walks (paper §6.1).
 
         ``kind`` distinguishes spills (``"write"``) from pool loads
         (``"read"``) so ``walk_bytes_written`` can be checked against the
         bytes a :class:`repro.io.DiskWalkPool` actually put on disk.
+        ``shard`` attributes a spill to one pool shard's writer
+        (``shard_spill_bytes`` breakdown); shard writers run on their own
+        threads, so the whole update is taken under one lock.
         """
         nbytes = n_walks * bytes_per_walk
-        self.walk_ios += 1
-        self.walk_bytes += nbytes
-        if kind == "write":
-            self.walk_bytes_written += nbytes
-        else:
-            self.walk_bytes_read += nbytes
-        self.sim_walk_io_time += self.preset.seq_cost(nbytes)
+        with self._walk_lock:
+            self.walk_ios += 1
+            self.walk_bytes += nbytes
+            if kind == "write":
+                self.walk_bytes_written += nbytes
+                if shard is not None:
+                    self.shard_spill_bytes[shard] = self.shard_spill_bytes.get(shard, 0) + nbytes
+            else:
+                self.walk_bytes_read += nbytes
 
     # -- summaries -------------------------------------------------------------
+    @property
+    def sim_walk_io_time(self) -> float:
+        """Modelled walk-I/O seconds: ``walk_ios`` sequential transfers of
+        ``walk_bytes`` total.  Derived from the order-independent integer
+        counters instead of accumulated per call, so concurrent shard
+        writers cannot perturb the float-summation order — the value is
+        bit-deterministic at any shard count."""
+        p = self.preset
+        return self.walk_ios * p.rand_latency + self.walk_bytes / p.seq_bandwidth
+
     @property
     def sim_io_time(self) -> float:
         return (
@@ -167,6 +203,8 @@ class IOStats:
             "overlapped_load_bytes": self.overlapped_load_bytes,
             "pipeline_stall_slots": self.pipeline_stall_slots,
             "writer_queue_peak": self.writer_queue_peak,
+            "shard_spill_bytes": dict(sorted(self.shard_spill_bytes.items())),
+            "shard_imbalance": self.shard_imbalance,
             "time_slots": self.time_slots,
             "supersteps": self.supersteps,
             "steps_sampled": self.steps_sampled,

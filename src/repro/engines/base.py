@@ -30,7 +30,7 @@ from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.stats import SSD, DevicePreset, IOStats
 from repro.core.transition import Node2vec, WalkTask
 from repro.core.walk import WalkBatch
-from repro.io import AsyncWalkPool, BlockStore, WalkPool, make_walk_pool
+from repro.io import AsyncWalkPool, BlockStore, ShardedWalkPool, WalkPool, make_walk_pool
 
 from .step import VID_PAD, advance_pair, pow2_pad, remap_search_iters
 
@@ -199,6 +199,7 @@ class EngineBase:
         seed: Optional[int] = None,
         async_pipeline: bool = False,
         writer_queue: int = 64,
+        pool_shards: int = 1,
     ):
         self.bg = bg
         self.task = task
@@ -232,19 +233,44 @@ class EngineBase:
             self.corpus[:, 0] = src
         # the storage layer: walk pool ("disk" tier) + block store; with the
         # async pipeline the pool persists through a sequenced writer thread
-        # (ticketed pushes — serial state sequence, off the critical path)
+        # (ticketed pushes — serial state sequence, off the critical path),
+        # and pool_shards > 1 partitions the keyspace across that many
+        # writers (one AsyncWalkPool-wrapped backend per shard)
         self.async_pipeline = bool(async_pipeline)
         self.writer_queue = writer_queue
-        self.pool: WalkPool = make_walk_pool(
-            pool,
-            num_blocks=bg.num_blocks,
-            stats=self.stats,
-            block_starts=bg.block_starts,
-            flush_walks=pool_flush_walks,
-            directory=pool_dir,
-        )
-        if self.async_pipeline and not isinstance(self.pool, AsyncWalkPool):
-            self.pool = AsyncWalkPool(self.pool, stats=self.stats, max_queue=writer_queue)
+        self.pool_shards = max(int(pool_shards), 1)
+        if self.pool_shards > 1 and not self.async_pipeline:
+            raise ValueError(
+                "pool_shards > 1 requires the async pipeline: shards are "
+                "per-shard sequenced writers (the serial reference mode has none)"
+            )
+        if self.pool_shards > 1 and not isinstance(pool, (str, ShardedWalkPool)):
+            raise ValueError(
+                "pool_shards > 1 needs a backend name (or a prebuilt ShardedWalkPool); "
+                "a plain pool instance cannot be partitioned after construction"
+            )
+        if self.pool_shards > 1 and isinstance(pool, str):
+            self.pool: WalkPool = ShardedWalkPool(
+                pool,
+                num_shards=self.pool_shards,
+                num_blocks=bg.num_blocks,
+                stats=self.stats,
+                block_starts=bg.block_starts,
+                flush_walks=pool_flush_walks,
+                directory=pool_dir,
+                max_queue=writer_queue,
+            )
+        else:
+            self.pool = make_walk_pool(
+                pool,
+                num_blocks=bg.num_blocks,
+                stats=self.stats,
+                block_starts=bg.block_starts,
+                flush_walks=pool_flush_walks,
+                directory=pool_dir,
+            )
+            if self.async_pipeline and not isinstance(self.pool, (AsyncWalkPool, ShardedWalkPool)):
+                self.pool = AsyncWalkPool(self.pool, stats=self.stats, max_queue=writer_queue)
         self.blocks = BlockStore(
             bg,
             self.stats,

@@ -28,6 +28,7 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.core.buckets import push_by_block_assignment
 from repro.core.graph import BlockedGraph, BlockView, block_of
 from repro.core.loader import BlockLoadingModel
 from repro.core.scheduler import TimeSlotPlan
@@ -72,18 +73,7 @@ class BiBlockEngine(EngineBase):
     # skewed storage: persist with min(B(u), B(v)); first-order models never
     # read prev, so they use the traditional B(cur) association (§7.8)
     def _persist(self, batch: WalkBatch, wid: np.ndarray) -> None:
-        if len(batch) == 0:
-            return
-        if self.order == 1:
-            assoc = block_of(self.bg.block_starts, batch.cur)
-        else:
-            assoc = np.minimum(
-                block_of(self.bg.block_starts, batch.prev),
-                block_of(self.bg.block_starts, batch.cur),
-            )
-        for b in np.unique(assoc):
-            m = assoc == b
-            self.pool.push(int(b), batch.select(m), wid[m])
+        push_by_block_assignment(self.pool, self.bg.block_starts, self.order, batch, wid)
 
     #: modelled in-memory cost per sampled step (feeds the LR exec component)
     STEP_COST = 2.0e-8

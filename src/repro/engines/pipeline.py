@@ -44,9 +44,14 @@ from repro.core.buckets import split_into_buckets
 from repro.core.scheduler import TimeSlotPlan
 from repro.core.stats import IOStats
 from repro.core.walk import WALK_BYTES, WalkBatch
-from repro.io import AsyncWalkPool, BlockStore
+from repro.io import AsyncWalkPool, BlockStore, ShardedWalkPool
 
 __all__ = ["BucketCursor", "BucketPipeline"]
+
+#: pool types whose persists ride sequenced writer threads and whose
+#: ``drain_async`` the pipeline can preload from — the single writer and
+#: its keyspace-partitioned generalisation (one writer per shard)
+SEQUENCED_POOLS = (AsyncWalkPool, ShardedWalkPool)
 
 
 class BucketCursor:
@@ -102,9 +107,12 @@ class BucketCursor:
 class BucketPipeline:
     """Drives slot preloads and bucket-view prefetches for one engine run.
 
-    With ``enabled=True`` the pool must be an :class:`repro.io.AsyncWalkPool`
-    (persists are sequenced through its writer thread) and
-    :meth:`preload_slot` starts the next slot's drain + split there; with
+    With ``enabled=True`` the pool must be sequenced — an
+    :class:`repro.io.AsyncWalkPool` or its sharded generalisation
+    :class:`repro.io.ShardedWalkPool` — and :meth:`preload_slot` starts the
+    next slot's drain + split on the writer owning that slot's shard (a
+    sharded pool routes ``drain_async`` to the owning shard's FIFO, so
+    drains for different blocks overlap each other too); with
     ``enabled=False`` every pool operation runs synchronously on the calling
     thread — the serial reference mode, bit-identical by construction.
 
@@ -126,8 +134,10 @@ class BucketPipeline:
         plan: TimeSlotPlan,
         enabled: bool = True,
     ):
-        if enabled and not isinstance(pool, AsyncWalkPool):
-            raise ValueError("async BucketPipeline needs an AsyncWalkPool")
+        if enabled and not isinstance(pool, SEQUENCED_POOLS):
+            raise ValueError(
+                "async BucketPipeline needs a sequenced pool (AsyncWalkPool or ShardedWalkPool)"
+            )
         self.pool = pool
         self.blocks = blocks
         self.block_starts = np.asarray(block_starts)
@@ -215,5 +225,5 @@ class BucketPipeline:
         failure surfaces from ``run()`` even when the final slot never
         touched the pool again."""
         self._preloads.clear()
-        if isinstance(self.pool, AsyncWalkPool):
+        if isinstance(self.pool, SEQUENCED_POOLS):
             self.pool.barrier()

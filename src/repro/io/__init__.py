@@ -19,7 +19,15 @@ from .blockfile import (
     write_block_file,
 )
 from .blockstore import BlockStore
-from .walkpool import AsyncWalkPool, DiskWalkPool, MemoryWalkPool, WalkPool, make_walk_pool
+from .walkpool import (
+    AsyncWalkPool,
+    DiskWalkPool,
+    MemoryWalkPool,
+    ShardedWalkPool,
+    WalkPool,
+    make_walk_pool,
+    shard_of_block,
+)
 
 __all__ = [
     "AsyncWalkPool",
@@ -29,8 +37,10 @@ __all__ = [
     "DiskBlockedGraph",
     "DiskWalkPool",
     "MemoryWalkPool",
+    "ShardedWalkPool",
     "WalkPool",
     "make_walk_pool",
+    "shard_of_block",
     "write_and_open",
     "write_block_file",
 ]

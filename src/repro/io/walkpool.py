@@ -28,6 +28,7 @@ never crossed the slow/fast boundary.  ``flush_walks=0`` spills every push
 from __future__ import annotations
 
 import os
+import shutil
 import tempfile
 import threading
 from collections import deque
@@ -44,10 +45,43 @@ __all__ = [
     "MemoryWalkPool",
     "DiskWalkPool",
     "AsyncWalkPool",
+    "ShardedWalkPool",
     "make_walk_pool",
+    "shard_of_block",
 ]
 
 _WID_BYTES = 8
+
+
+def shard_of_block(b: int, num_shards: int) -> int:
+    """Deterministic owner shard of block ``b``'s walk pool.
+
+    Round-robin striping (``b % num_shards``): block ids are small
+    *contiguous* integers, so striping is the perfect hash for this
+    keyspace — every shard owns an equal slice (a multiplicative hash
+    collides badly here: 2 blocks over 2 shards can land on one), it is
+    independent of ``PYTHONHASHSEED`` and stable across hosts, and when
+    ``num_shards == num_blocks`` it degenerates to the identity — one
+    shard per rank, the distributed engine's natural placement.  Every key
+    of the ``(block, bucket)`` keyspace an engine persists with — the
+    skewed ``min(B(u), B(v))`` or traditional ``B(cur)`` association —
+    resolves through this one function, so a block's entire op stream
+    lands on one shard, in program order.
+    """
+    return int(b) % max(int(num_shards), 1)
+
+
+def _first_missing_ancestor(path: str) -> Optional[str]:
+    """The topmost path component ``os.makedirs(path)`` would create (the
+    root to remove to undo it), or None when ``path`` already exists."""
+    path = os.path.abspath(path)
+    if os.path.isdir(path):
+        return None
+    root = path
+    parent = os.path.dirname(root)
+    while parent and parent != root and not os.path.isdir(parent):
+        root, parent = parent, os.path.dirname(parent)
+    return root
 
 
 @runtime_checkable
@@ -199,6 +233,10 @@ class DiskWalkPool(_PoolBase):
         if directory is None:
             self._tmpdir = tempfile.TemporaryDirectory(prefix="grasorw_pool_")
             directory = self._tmpdir.name
+        # directories this pool creates (the whole makedirs chain) are
+        # removed wholesale on close; in a pre-existing (user-owned)
+        # directory only the spill files are
+        self._created_root = _first_missing_ancestor(directory)
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self._spilled_counts = np.zeros(num_blocks, np.int64)
@@ -248,9 +286,24 @@ class DiskWalkPool(_PoolBase):
         return batch, wid.copy()
 
     def close(self) -> None:
+        """Remove this pool's spill files so an aborted run (e.g. a writer
+        fault mid-slot) never orphans them — pool state is gone with the
+        object either way.  Directories go too when the pool created them
+        (a fresh temp dir, or the whole makedirs chain of a
+        previously-nonexistent explicit path); a pre-existing directory is
+        left in place.  Idempotent."""
         if self._tmpdir is not None:
             self._tmpdir.cleanup()
             self._tmpdir = None
+            return
+        for b in range(self.num_blocks):
+            for path in (self.record_path(b), self._wid_path(b)):
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
+        if self._created_root is not None:
+            shutil.rmtree(self._created_root, ignore_errors=True)
 
 
 class AsyncWalkPool:
@@ -438,6 +491,175 @@ class AsyncWalkPool:
             self._cv.notify_all()
         self._worker.join()
         self.base.close()
+
+
+class _ShardStats:
+    """Stats facade handed to one shard's base pool.
+
+    Base pools charge walk I/O through ``stats.walk_io`` from their shard's
+    writer thread; this facade forwards the charge to the shared
+    :class:`~repro.core.stats.IOStats` (which serialises concurrent shard
+    writers under its lock) and stamps it with the shard id, feeding the
+    ``shard_spill_bytes`` breakdown.
+    """
+
+    def __init__(self, parent: IOStats, shard: int):
+        self.parent = parent
+        self.shard = shard
+
+    def walk_io(self, n_walks: int, *, bytes_per_walk: int = 16, kind: str = "write") -> None:
+        self.parent.walk_io(n_walks, bytes_per_walk=bytes_per_walk, kind=kind, shard=self.shard)
+
+
+class ShardedWalkPool:
+    """Partition of the walk-pool keyspace across N sequenced writers.
+
+    The ``(block, bucket)`` keyspace engines persist with is partitioned by
+    :func:`shard_of_block` — a deterministic hash of the block id — across
+    ``num_shards`` shards.  Each shard is a full pool backend
+    (memory/disk, its own spill directory) wrapped in its own
+    :class:`AsyncWalkPool` sequenced writer, so persists and
+    ``drain_async`` preloads for blocks owned by *different* shards proceed
+    concurrently with no cross-shard ordering, while per-shard FIFO ticket
+    order is preserved.
+
+    Determinism is inherited, not re-argued: every op on block ``b``
+    (push, drain, flush) is forwarded to ``shard_of_block(b)``'s FIFO in
+    program order, so a block's op subsequence — and with it the per-block
+    write buffer, its spill points, and the prefix a ``drain_async``
+    observes — is *identical* to what a single sequenced writer would
+    apply.  Walks, walk-I/O charges, and the per-shard spill breakdown
+    (``IOStats.shard_spill_bytes``, summing to ``walk_bytes_written``) are
+    therefore invariant across shard counts and pool backends; only the
+    concurrency changes.  The ``shard_imbalance`` gauge (max-over-mean of
+    pushed walks per shard) is likewise a pure function of the push totals.
+
+    ``counts``/``min_hop`` are tracked eagerly on the caller's thread —
+    the same sequential view of pending walks :class:`AsyncWalkPool`
+    exposes.  A writer fault in *any* shard latches and re-raises from
+    every subsequent pool op and from :meth:`barrier`; ``close`` joins all
+    writers and never raises or hangs.
+    """
+
+    def __init__(
+        self,
+        backend: str,
+        *,
+        num_shards: int,
+        num_blocks: int,
+        stats: IOStats,
+        block_starts: Optional[np.ndarray] = None,
+        flush_walks: Optional[int] = 1 << 18,
+        directory: Optional[str] = None,
+        max_queue: int = 64,
+    ):
+        if not isinstance(backend, str):
+            raise ValueError("ShardedWalkPool builds its shards itself; pass a backend name")
+        self.num_shards = max(int(num_shards), 1)
+        self.num_blocks = num_blocks
+        self.stats = stats
+        self.counts = np.zeros(num_blocks, np.int64)
+        self.min_hop = np.full(num_blocks, np.inf)
+        self.owner = np.array(
+            [shard_of_block(b, self.num_shards) for b in range(num_blocks)], np.int64
+        )
+        self.pushed_per_shard = np.zeros(self.num_shards, np.int64)
+        # shard pools remove their own spill subdirs on close; any parent
+        # chain we are about to create is ours to remove too
+        self.directory = directory
+        self._created_root = None if directory is None else _first_missing_ancestor(directory)
+        self.shards: List[AsyncWalkPool] = []
+        for k in range(self.num_shards):
+            sub = None if directory is None else os.path.join(directory, f"shard_{k:02d}")
+            base = make_walk_pool(
+                backend,
+                num_blocks=num_blocks,
+                stats=_ShardStats(stats, k),
+                block_starts=block_starts,
+                flush_walks=flush_walks,
+                directory=sub,
+            )
+            self.shards.append(AsyncWalkPool(base, stats=stats, max_queue=max_queue))
+        self._closed = False
+
+    @property
+    def backend(self) -> str:
+        return self.shards[0].backend
+
+    def shard_of(self, b: int) -> int:
+        return int(self.owner[b])
+
+    def writer(self, b: int) -> AsyncWalkPool:
+        """The sequenced writer owning block ``b``'s pool (the pipeline
+        targets it for next-slot drains)."""
+        return self.shards[self.shard_of(b)]
+
+    def _raise_if_failed(self) -> None:
+        for shard in self.shards:
+            if shard._error is not None:
+                raise RuntimeError("walk-pool shard writer failed") from shard._error
+
+    # -- the engine-facing API ------------------------------------------------
+    def push(self, b: int, batch: WalkBatch, wid: np.ndarray) -> None:
+        if len(batch) == 0:
+            return
+        self._raise_if_failed()
+        k = self.shard_of(b)
+        self.shards[k].push(b, batch, wid)
+        self.counts[b] += len(batch)
+        self.min_hop[b] = min(self.min_hop[b], float(batch.hop.min()))
+        self.pushed_per_shard[k] += len(batch)
+        total = int(self.pushed_per_shard.sum())
+        self.stats.note_shard_imbalance(
+            int(self.pushed_per_shard.max()) * self.num_shards / max(total, 1)
+        )
+
+    def drain_async(
+        self,
+        b: int,
+        transform: Optional[Callable[[WalkBatch, np.ndarray], object]] = None,
+    ) -> Future:
+        self._raise_if_failed()
+        fut = self.writer(b).drain_async(b, transform)
+        self.counts[b] = 0
+        self.min_hop[b] = np.inf
+        return fut
+
+    def load(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        payload, _, _ = self.drain_async(b).result()
+        return payload
+
+    def peek(self, b: int) -> Tuple[WalkBatch, np.ndarray]:
+        return self.writer(b).peek(b)
+
+    def flush(self, b: Optional[int] = None) -> None:
+        if b is not None:
+            self.writer(b).flush(b)
+            return
+        for shard in self.shards:
+            shard.flush(None)
+
+    def barrier(self) -> None:
+        """Wait out every shard's writer queue; re-raises any latched fault."""
+        for shard in self.shards:
+            shard.barrier()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for shard in self.shards:
+            shard.close()
+        if self._created_root is not None:
+            shutil.rmtree(self._created_root, ignore_errors=True)
+
+    # -- disk-backend extras, aggregated over shards ---------------------------
+    @property
+    def bytes_written(self) -> int:
+        return sum(getattr(s.base, "bytes_written", 0) for s in self.shards)
+
+    def on_disk_bytes(self) -> int:
+        return sum(s.base.on_disk_bytes() for s in self.shards if hasattr(s.base, "on_disk_bytes"))
 
 
 def make_walk_pool(

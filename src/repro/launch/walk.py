@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.walk --task rwnv --vertices 5000 \
         --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25] \
         [--graph-backend disk --graph-dir /path/to/dir] [--pool disk] \
-        [--no-async-pipeline] [--writer-queue 64]
+        [--no-async-pipeline] [--writer-queue 64] [--pool-shards 4]
 
 Prints the paper's headline statistics (block/vertex/on-demand I/Os,
 simulated I/O + exec time) as one CSV row per engine.
@@ -63,6 +63,15 @@ def main():
         default=64,
         help="bounded depth of the async walk-pool writer queue "
         "(bi-block engine; ignored with --no-async-pipeline)",
+    )
+    ap.add_argument(
+        "--pool-shards",
+        type=int,
+        default=1,
+        help="partition the walk-pool keyspace across this many shards, "
+        "each with its own sequenced writer thread (bi-block engine; "
+        "requires the async pipeline; walks are bit-identical across "
+        "shard counts)",
     )
     ap.add_argument(
         "--graph-backend",
@@ -126,6 +135,7 @@ def main():
         loading=args.loading,
         async_pipeline=not args.no_async_pipeline,
         writer_queue=args.writer_queue,
+        pool_shards=args.pool_shards,
     )
     engines = args.engine or ["biblock", "sogw"]
     print(

@@ -71,6 +71,9 @@ def test_bench_smoke_runs_matrix_and_uploads_artifact(wf):
     # the async-pipeline overlap entry (identical CRC + nonzero overlapped
     # bytes + fewer stall slots than the serial run) rides the same job
     assert any("pipeline_overlap" in r and "--json" in r for r in runs)
+    # ... and so does the sharded-pool entry (identical CRCs + invariant
+    # charges across pool_shards {1,2,4,8}, real per-shard writers)
+    assert any("sharded_pool" in r and "--json" in r for r in runs)
     assert any("--pool disk" in r and "--graph-backend disk" in r for r in runs)
     uploads = [s for s in job["steps"] if "upload-artifact" in str(s.get("uses", ""))]
     assert len(uploads) == 1

@@ -82,6 +82,45 @@ def test_distributed_engine_subprocess():
     assert out["q_alive"] == 0
 
 
+def test_distributed_persists_through_shared_pool(tmp_path):
+    """The shard_map driver carries walk state between sweeps through the
+    shared :class:`repro.io.ShardedWalkPool` instead of private arrays:
+    capacity-limited routing forces a multi-sweep frontier through the
+    pool, a disk-backed pool moves real spilled bytes, and — because the
+    RNG is counter-based per (walk id, hop) and the drain scatters each
+    walk back to its global wid slot — not a single trajectory changes."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import erdos_renyi, partition_into_n_blocks, rwnv_task
+    from repro.core.distributed import DistributedWalkEngine
+
+    g = erdos_renyi(300, 2400, seed=3)
+    bg = partition_into_n_blocks(g, 1)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    task = rwnv_task(p=2.0, q=0.5, walks_per_vertex=1, length=6, seed=5)
+    keys = ("prev", "cur", "hop", "alive")
+
+    ref = DistributedWalkEngine(bg, task, mesh).run()
+    limited = DistributedWalkEngine(bg, task, mesh, capacity_factor=0.1).run()
+    assert limited["sweeps"] > ref["sweeps"]  # the frontier really crossed sweeps
+    for k in keys:
+        np.testing.assert_array_equal(limited[k], ref[k])
+
+    pool_dir = str(tmp_path / "pool")
+    disk = DistributedWalkEngine(
+        bg, task, mesh, capacity_factor=0.1,
+        pool="disk", pool_flush_walks=0, pool_dir=pool_dir, pool_shards=2,
+    ).run()
+    for k in keys:
+        np.testing.assert_array_equal(disk[k], ref[k])
+    s = disk["stats"]
+    assert s.walk_bytes_written > 0  # real records moved through the pool
+    assert sum(s.shard_spill_bytes.values()) == s.walk_bytes_written
+    assert not os.path.isdir(pool_dir), "shared pool spill dir leaked"
+
+
 def test_distributed_single_device_matches_oracle():
     """In-process pin for the distributed sweep (1x1 mesh, one block): the
     wid-carrying routing + counter-based RNG must reproduce the in-memory

@@ -3,8 +3,11 @@
 The async pipeline (walk-pool writer thread + next-slot pool drain/bucket
 split preloads + plan-driven view prefetches) must be *observationally
 identical* to the serial reference mode: same walks, same corpus, same
-deterministic block/on-demand charges — across both pool backends and both
-graph backends.  A writer-thread fault must propagate out of ``run()`` and
+deterministic block/on-demand charges — across both pool backends, both
+graph backends, and every pool shard count (the sharded pool partitions
+the keyspace across per-shard sequenced writers; walk-spill charges are
+additionally invariant across shard counts).  A writer-thread fault must
+propagate out of ``run()``, remove any disk-pool spill directories, and
 ``close()`` must neither raise nor hang.
 """
 
@@ -51,10 +54,14 @@ def _result_sig(res):
     nv=st.integers(60, 140),
     nblocks=st.integers(2, 5),
     flush=st.sampled_from([0, 16, 1 << 18]),
+    shards=st.sampled_from([1, 2, 4]),
 )
-def test_async_pipeline_bitwise_identical_to_serial(seed, nv, nblocks, flush):
-    """async x {memory, disk} pool x {ram, disk} graph == serial, bitwise,
-    on random graphs — at spill-every-push, mid, and never-spill thresholds."""
+def test_async_pipeline_bitwise_identical_to_serial(seed, nv, nblocks, flush, shards):
+    """async x {memory, disk} pool x {ram, disk} graph x pool_shards {1,2,4}
+    == serial, bitwise, on random graphs — at spill-every-push, mid, and
+    never-spill thresholds.  Every sharded run is compared to the same
+    single-writer serial reference, so walks and block/on-demand charges
+    are transitively bit-identical across shard counts too."""
     import shutil
     import tempfile
 
@@ -82,9 +89,12 @@ def test_async_pipeline_bitwise_identical_to_serial(seed, nv, nblocks, flush):
                     async_pipeline=True,
                     pool=pool,
                     pool_flush_walks=flush,
-                    pool_dir=os.path.join(tmp, f"pool_{pool}_{backend}"),
+                    pool_shards=shards,
+                    pool_dir=os.path.join(tmp, f"pool_{pool}_{backend}_{shards}"),
                 ).run()
-                assert _result_sig(res) == ref, f"diverged at pool={pool} graph={backend}"
+                assert _result_sig(res) == ref, (
+                    f"diverged at pool={pool} graph={backend} shards={shards}"
+                )
                 if backend == "disk":
                     bgx.close()
     finally:
@@ -119,6 +129,71 @@ def test_async_pipeline_overlaps_and_reduces_stalls(small_blocked):
     r_again = BiBlockEngine(small_blocked, task, pool_flush_walks=64).run()
     assert r_again.stats.overlapped_load_bytes == r_async.stats.overlapped_load_bytes
     assert r_again.stats.pipeline_stall_slots == r_async.stats.pipeline_stall_slots
+
+
+def test_sharded_pool_charges_invariant_across_shard_counts(small_blocked):
+    """Walk-spill charges are not merely deterministic per shard count —
+    they are *invariant* across shard counts (a block's op stream lands on
+    exactly one shard in program order, so its spill points cannot move),
+    and the per-shard breakdown partitions the total exactly."""
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    ref = None
+    for shards in (1, 2, 4, 8):
+        res = BiBlockEngine(
+            small_blocked, task, pool_flush_walks=64, pool_shards=shards
+        ).run()
+        s = res.stats
+        sig = (
+            res.endpoint_counts.tobytes(),
+            s.walk_bytes_written,
+            s.walk_bytes_read,
+            s.block_ios,
+            s.block_bytes,
+            s.ondemand_ios,
+            s.ondemand_bytes,
+        )
+        if ref is None:
+            ref = sig
+        assert sig == ref, f"diverged at pool_shards={shards}"
+        if shards > 1:
+            assert sum(s.shard_spill_bytes.values()) == s.walk_bytes_written
+            assert len(s.shard_spill_bytes) >= 2, "spills never left one shard"
+
+
+def test_writer_fault_leaves_no_orphaned_spill_dirs(small_blocked, tmp_path):
+    """Satellite regression: a writer-thread fault aborting ``run()``
+    mid-slot must remove the DiskWalkPool spill directories — including an
+    explicitly-passed ``pool_dir`` the pool created (the whole makedirs
+    chain, nested paths too) — not just the happy path's temp dir."""
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    for shards in (1, 4):
+        # nested: every component below tmp_path is pool-created
+        created_root = tmp_path / f"nested_{shards}"
+        pool_dir = str(created_root / "deeper" / "pool")
+        eng = BiBlockEngine(
+            small_blocked,
+            task,
+            pool="disk",
+            pool_flush_walks=0,
+            pool_dir=pool_dir,
+            pool_shards=shards,
+        )
+        assert os.path.isdir(pool_dir)
+
+        def boom(b, batch, wid):
+            raise RuntimeError("injected spill failure")
+
+        if shards == 1:
+            eng.pool.base._spill = boom
+        else:
+            for shard in eng.pool.shards:
+                shard.base._spill = boom
+        with pytest.raises(RuntimeError):
+            eng.run()
+        assert eng._closed
+        assert not os.path.isdir(str(created_root)), (
+            f"pool_shards={shards}: spill dir chain orphaned after a writer fault"
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+"""WalkPool conformance suite: one contract, four backends.
+
+Every pool backend — Memory, Disk, Async-wrapped, Sharded — must be
+observationally identical to the engines.  This suite pins the protocol
+contract once, parameterized over the backends, so a new backend (or a
+refactor of an old one) is held to the same five invariants:
+
+* **push-order preservation** — ``load`` returns walks in exact push order;
+* **prefix + remainder ≡ one serial load** — draining mid-sequence and
+  then draining the rest concatenates to what a single slot-start ``load``
+  would have returned (for sequenced pools the prefix drain really runs on
+  the writer thread, concurrent with the remainder pushes);
+* **flush-threshold spill points** — the write buffer spills exactly when
+  a block's buffered count crosses ``flush_walks``, charging the same
+  walk bytes on every backend (and, sharded, summing the per-shard
+  breakdown to the total);
+* **idempotent close** — ``close`` twice is safe and removes every spill
+  file/directory the pool created;
+* **writer-fault latching/propagation** — a failing spill surfaces as a
+  RuntimeError from the op stream (synchronously for plain pools, latched
+  and re-raised from subsequent ops for sequenced ones), ``close`` never
+  hangs, and no spill directory is orphaned.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import IOStats, WalkBatch
+from repro.io import AsyncWalkPool, DiskWalkPool, MemoryWalkPool, ShardedWalkPool
+
+NUM_BLOCKS = 6
+STARTS = np.array([0, 100, 200, 300, 400, 500, 600])
+V = 600
+
+BACKENDS = ("memory", "disk", "async", "sharded")
+
+
+def _batch(rng, n):
+    return WalkBatch(
+        rng.integers(0, V, n),
+        rng.integers(0, V, n),
+        rng.integers(0, V, n),
+        rng.integers(0, 100, n).astype(np.int32),
+    )
+
+
+def _settle(pool):
+    """Wait out any writer queues so spill charges are observable."""
+    if hasattr(pool, "barrier"):
+        pool.barrier()
+
+
+def _spill_dirs(pool):
+    """Every on-disk spill directory the pool owns (empty for memory pools)."""
+    if isinstance(pool, ShardedWalkPool):
+        dirs = [s.base.directory for s in pool.shards if isinstance(s.base, DiskWalkPool)]
+        if pool.directory is not None:
+            dirs.append(pool.directory)
+        return dirs
+    if isinstance(pool, AsyncWalkPool):
+        pool = pool.base
+    return [pool.directory] if isinstance(pool, DiskWalkPool) else []
+
+
+def _inject_spill_fault(pool):
+    def boom(b, batch, wid):
+        raise RuntimeError("injected spill failure")
+
+    if isinstance(pool, ShardedWalkPool):
+        for shard in pool.shards:
+            shard.base._spill = boom
+    elif isinstance(pool, AsyncWalkPool):
+        pool.base._spill = boom
+    else:
+        pool._spill = boom
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request):
+    return request.param
+
+
+@pytest.fixture
+def make_pool(backend, tmp_path):
+    """Factory building one pool of the parameterized backend; pools get a
+    fresh (pool-owned) spill directory each and are closed at teardown —
+    which doubles as the close-idempotence check for pools a test already
+    closed."""
+    pools = []
+
+    def make(stats, flush_walks=1 << 18):
+        d = str(tmp_path / f"{backend}_{len(pools)}")
+        if backend == "memory":
+            pool = MemoryWalkPool(NUM_BLOCKS, stats, flush_walks)
+        elif backend == "disk":
+            pool = DiskWalkPool(NUM_BLOCKS, stats, STARTS, flush_walks, directory=d)
+        elif backend == "async":
+            pool = AsyncWalkPool(MemoryWalkPool(NUM_BLOCKS, stats, flush_walks), stats=stats)
+        else:
+            pool = ShardedWalkPool(
+                "disk",
+                num_shards=3,
+                num_blocks=NUM_BLOCKS,
+                stats=stats,
+                block_starts=STARTS,
+                flush_walks=flush_walks,
+                directory=d,
+            )
+        pools.append(pool)
+        return pool
+
+    yield make
+    for pool in pools:
+        pool.close()
+
+
+class TestWalkPoolConformance:
+    def test_push_order_preserved(self, make_pool):
+        pool = make_pool(IOStats(), flush_walks=8)
+        rng = np.random.default_rng(0)
+        pushed, wids = [], []
+        for k in range(5):
+            batch = _batch(rng, 7)
+            wid = np.arange(7, dtype=np.int64) + 100 * k
+            pool.push(3, batch, wid)
+            pushed.append(batch)
+            wids.append(wid)
+        assert pool.counts[3] == 35
+        out, wid_out = pool.load(3)
+        ref = WalkBatch.concat(pushed)
+        np.testing.assert_array_equal(out.src, ref.src)
+        np.testing.assert_array_equal(out.prev, ref.prev)
+        np.testing.assert_array_equal(out.cur, ref.cur)
+        np.testing.assert_array_equal(out.hop, ref.hop)
+        np.testing.assert_array_equal(wid_out, np.concatenate(wids))
+        assert pool.counts[3] == 0
+
+    def test_drain_prefix_plus_remainder_is_one_serial_load(self, make_pool):
+        rng = np.random.default_rng(1)
+        batches = [_batch(rng, 7) for _ in range(6)]
+        wids = [np.arange(7, dtype=np.int64) + 10 * k for k in range(6)]
+
+        serial = make_pool(IOStats(), flush_walks=10)
+        for batch, wid in zip(batches, wids):
+            serial.push(2, batch, wid)
+        ref, ref_wid = serial.load(2)
+
+        pool = make_pool(IOStats(), flush_walks=10)
+        for batch, wid in zip(batches[:3], wids[:3]):
+            pool.push(2, batch, wid)
+        if hasattr(pool, "drain_async"):
+            # the prefix drain runs on the owning writer thread while the
+            # remainder pushes are still being enqueued
+            fut = pool.drain_async(2)
+            for batch, wid in zip(batches[3:], wids[3:]):
+                pool.push(2, batch, wid)
+            (pre, pre_wid), n_pre, _spilled = fut.result()
+            assert n_pre == 21
+        else:
+            pre, pre_wid = pool.load(2)
+            for batch, wid in zip(batches[3:], wids[3:]):
+                pool.push(2, batch, wid)
+        rem, rem_wid = pool.load(2)
+        got = WalkBatch.concat([pre, rem])
+        np.testing.assert_array_equal(got.src, ref.src)
+        np.testing.assert_array_equal(got.prev, ref.prev)
+        np.testing.assert_array_equal(got.cur, ref.cur)
+        np.testing.assert_array_equal(got.hop, ref.hop)
+        np.testing.assert_array_equal(np.concatenate([pre_wid, rem_wid]), ref_wid)
+
+    def test_flush_threshold_spill_points(self, make_pool, backend):
+        stats = IOStats()
+        pool = make_pool(stats, flush_walks=10)
+        rng = np.random.default_rng(2)
+        pool.push(0, _batch(rng, 6), np.arange(6, dtype=np.int64))
+        _settle(pool)
+        assert stats.walk_bytes_written == 0  # below threshold: buffered only
+        pool.push(0, _batch(rng, 6), np.arange(6, dtype=np.int64))
+        _settle(pool)
+        assert stats.walk_bytes_written == 12 * 16  # crossed: buffer spilled
+        pool.push(4, _batch(rng, 9), np.arange(9, dtype=np.int64))
+        _settle(pool)
+        assert stats.walk_bytes_written == 12 * 16  # other block still buffered
+        out, _ = pool.load(0)
+        assert len(out) == 12
+        assert stats.walk_bytes_read == 12 * 16  # only spilled walks re-read
+        out4, _ = pool.load(4)
+        assert len(out4) == 9
+        assert stats.walk_bytes_read == 12 * 16
+        if backend == "sharded":
+            assert sum(stats.shard_spill_bytes.values()) == stats.walk_bytes_written
+
+    def test_close_idempotent_and_removes_spill_files(self, make_pool):
+        stats = IOStats()
+        pool = make_pool(stats, flush_walks=0)  # spill every push
+        rng = np.random.default_rng(3)
+        for b in (0, 1, 4):
+            pool.push(b, _batch(rng, 5), np.arange(5, dtype=np.int64))
+        _settle(pool)
+        dirs = _spill_dirs(pool)
+        pool.close()
+        pool.close()
+        for d in dirs:
+            assert not os.path.isdir(d), f"spill dir {d} survived close()"
+
+    def test_spill_fault_propagates_and_close_does_not_hang(self, make_pool, backend):
+        stats = IOStats()
+        pool = make_pool(stats, flush_walks=0)  # the fault fires on push 1
+        _inject_spill_fault(pool)
+        rng = np.random.default_rng(4)
+        batch, wid = _batch(rng, 3), np.arange(3, dtype=np.int64)
+        if backend in ("memory", "disk"):
+            # plain pools spill on the calling thread: immediate propagation
+            with pytest.raises(RuntimeError, match="injected"):
+                pool.push(0, batch, wid)
+        else:
+            pool.push(0, batch, wid)  # enqueues; the writer thread faults
+            with pytest.raises(RuntimeError):
+                pool.barrier()
+            # the latched fault re-raises from every subsequent operation
+            with pytest.raises(RuntimeError):
+                pool.push(0, batch, wid)
+            with pytest.raises(RuntimeError):
+                pool.load(0)
+        dirs = _spill_dirs(pool)
+        t = threading.Thread(target=pool.close)
+        t.start()
+        t.join(timeout=30)
+        assert not t.is_alive(), "close() hung after a spill fault"
+        for d in dirs:
+            assert not os.path.isdir(d), f"spill dir {d} orphaned after fault"
