@@ -49,30 +49,29 @@ def lm_steps() -> list[str]:
 
 def walk_kernel_throughput() -> list[str]:
     from repro.core import erdos_renyi, partition_into_n_blocks
+    from repro.core.graph import BlockView
+    from repro.engines.base import ResidentPair
     from repro.kernels import node2vec_step
 
     g = erdos_renyi(2000, 16000, seed=0)
     bg = partition_into_n_blocks(g, 4)
-    a, b = bg.materialize_block(0), bg.materialize_block(2)
-    pair = (
-        jnp.array([a.start, b.start], jnp.int32),
-        jnp.array([a.nverts, b.nverts], jnp.int32),
-        jnp.stack([jnp.asarray(a.indptr), jnp.asarray(b.indptr)]),
-        jnp.stack([jnp.asarray(a.indices), jnp.asarray(b.indices)]),
-        jnp.zeros((2, bg.max_block_edges), jnp.int32),
-        jnp.ones((2, bg.max_block_edges), jnp.float32),
-    )
+    rp = ResidentPair(bg, has_alias=False)
+    rp.set_slot(0, BlockView.from_resident(bg.materialize_block(0)))
+    rp.set_slot(1, BlockView.from_resident(bg.materialize_block(2)))
+    pair, v_iters = rp.device_args()
     rng = np.random.default_rng(0)
     n = 4096
     cur = jnp.asarray(rng.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32))
     prev = jnp.asarray(rng.integers(bg.block_starts[2], bg.block_starts[3], n).astype(np.int32))
+    wid = jnp.arange(n, dtype=jnp.int32)
     hop = jnp.ones(n, jnp.int32)
     active = jnp.ones(n, bool)
     key = jax.random.PRNGKey(0)
     rows = []
     for use_kernel, name in ((True, "pallas_interpret"), (False, "jnp_ref")):
-        fn = lambda: node2vec_step(*pair, prev, cur, hop, active, key,
-                                   use_kernel=use_kernel, interpret=True)[0]
+        fn = lambda: node2vec_step(*pair, wid, prev, cur, hop, active, key,
+                                   v_iters=v_iters, use_kernel=use_kernel,
+                                   interpret=True)[0]
         dt = _time(lambda: fn())
         rows.append(
             f"walk_step_{name},{dt*1e6:.1f},steps_per_s={n/dt:.0f}"

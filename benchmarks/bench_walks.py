@@ -573,6 +573,43 @@ def sharded_pool() -> list[str]:
     return rows
 
 
+def fused_advance() -> list[str]:
+    """The fused Pallas multi-hop advance vs the plain jitted JAX advance.
+
+    Runs the same RWNV workload under ``advance_impl="jax"`` and
+    ``advance_impl="pallas"`` (interpret mode on CPU CI; Mosaic on TPU),
+    *asserts* the walks are bit-identical (endpoint histogram CRC + step
+    count + deterministic I/O charges — the kernel draws the very same
+    counter-keyed threefry uniforms), and reports ``us_per_call`` for both
+    so the report tracks the fused kernel's speed against the default path.
+    """
+    g = _default_graph()
+    bg = _partition(g, N_BLOCKS)
+    task = rwnv_task(p=2.0, q=0.5, walks_per_vertex=WALKS_PV, length=LENGTH, seed=17)
+    rows, base_sig = [], None
+    for impl in ("jax", "pallas"):
+        kw: Dict[str, object] = dict(POOL_KW, advance_impl=impl)
+        BiBlockEngine(bg, task, **kw).run()  # warm the jit cache off the clock
+        res = BiBlockEngine(bg, task, **kw).run()
+        s = res.stats
+        crc = zlib.crc32(np.ascontiguousarray(res.endpoint_counts).tobytes())
+        sig = (
+            crc, s.steps_sampled, s.block_ios, s.block_bytes,
+            s.ondemand_ios, s.ondemand_bytes,
+        )
+        if base_sig is None:
+            base_sig = sig
+        assert sig == base_sig, (
+            f"advance_impl={impl} changed the walks or charges: {sig} != {base_sig}"
+        )
+        rows.append(_row(
+            f"fused_advance_{impl}", _us_per_step(res),
+            f"endpoint_crc={crc:#010x};steps={s.steps_sampled};"
+            f"exec_s={s.exec_time:.3f}",
+        ))
+    return rows
+
+
 ALL: Dict[str, Callable[[], list[str]]] = {
     "fig1_profile": fig1_profile,
     "table3_engines": table3_engines,
@@ -586,6 +623,7 @@ ALL: Dict[str, Callable[[], list[str]]] = {
     "backend_matrix": backend_matrix,
     "pipeline_overlap": pipeline_overlap,
     "sharded_pool": sharded_pool,
+    "fused_advance": fused_advance,
 }
 
 

@@ -14,7 +14,7 @@ run outside the GitHub runner image are *simulated* and reported as SKIP:
 
 Exit status is non-zero iff any executed step fails, so
 
-    python scripts/ci_dryrun.py [--timeout 900]
+    python scripts/ci_dryrun.py [--timeout 1800]
 
 is the local equivalent of a green/red CI run.
 """
@@ -96,7 +96,7 @@ def run_step(step: dict, env: dict, timeout: int) -> tuple[str, str]:
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--timeout", type=int, default=900, help="seconds per step")
+    ap.add_argument("--timeout", type=int, default=1800, help="seconds per step")
     ap.add_argument("jobs", nargs="*", help="job ids to replay (default: all)")
     args = ap.parse_args(argv)
 

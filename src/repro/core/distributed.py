@@ -32,7 +32,10 @@ counter-based per (walk id, hop), the roundtrip changes nothing about the
 sampled trajectories.
 
 The per-walk step math is `pair_advance_impl` — the same function the
-single-host engines jit.  One sampler, three deployment tiers.
+single-host engines jit, drawing through the hand-rolled
+:mod:`repro.kernels.rng` threefry (shared with the fused Pallas kernel),
+which lowers cleanly inside `shard_map`.  One sampler, one RNG, three
+deployment tiers.
 """
 
 from __future__ import annotations

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Optional, Tuple, Union
 
 import numpy as np
@@ -31,6 +32,7 @@ from repro.core.stats import SSD, DevicePreset, IOStats
 from repro.core.transition import Node2vec, WalkTask
 from repro.core.walk import WalkBatch
 from repro.io import AsyncWalkPool, BlockStore, ShardedWalkPool, WalkPool, make_walk_pool
+from repro.kernels.pair_advance import fused_advance_pair
 
 from .step import VID_PAD, advance_pair, pow2_pad, remap_search_iters
 
@@ -200,6 +202,8 @@ class EngineBase:
         async_pipeline: bool = False,
         writer_queue: int = 64,
         pool_shards: int = 1,
+        advance_impl: str = "jax",
+        advance_interpret: bool = True,
     ):
         self.bg = bg
         self.task = task
@@ -217,6 +221,13 @@ class EngineBase:
         if self.has_alias:
             bg.ensure_alias()
         self.n_iters = int(np.ceil(np.log2(max(bg.max_block_edges, 2)))) + 2
+        # the advance lowering: "jax" (plain jitted impl) or "pallas" (the
+        # fused multi-hop kernel, repro.kernels.pair_advance) — both draw
+        # through kernels/rng, so their walks are bit-identical
+        if advance_impl not in ("jax", "pallas"):
+            raise ValueError(f"advance_impl must be 'jax' or 'pallas', got {advance_impl!r}")
+        self.advance_impl = advance_impl
+        self.advance_interpret = bool(advance_interpret)
         # counter-based RNG: one fixed base key; draws are keyed per
         # (walk id, hop), never per call — see repro.engines.step
         self._base_key = jax.random.PRNGKey(self.seed)
@@ -335,7 +346,11 @@ class EngineBase:
         alive_dev = jnp.asarray(np.concatenate([alive_host, np.zeros(pad, bool)]))
         pair_args, v_iters = self.pair.device_args()
         t0 = time.perf_counter()
-        out = advance_pair(
+        if self.advance_impl == "pallas":
+            advance = partial(fused_advance_pair, interpret=self.advance_interpret)
+        else:
+            advance = advance_pair
+        out = advance(
             *pair_args,
             wid_dev,
             prev,

@@ -2,8 +2,8 @@
 
 Vectorised Alg. 2 ``UpdateWalk`` over a *view pair*: alias/uniform proposal +
 Node2vec rejection test with binary-search membership
-(:mod:`repro.core.sampling`); the Pallas kernel in
-:mod:`repro.kernels.node2vec_step` is the TPU version of exactly this loop.
+(:mod:`repro.core.sampling`); the fused Pallas kernel in
+:mod:`repro.kernels.pair_advance` is the TPU version of exactly this loop.
 
 Two properties distinguish this implementation from a textbook step loop:
 
@@ -20,8 +20,9 @@ Two properties distinguish this implementation from a textbook step loop:
   the view (a mid-advance extension).
 
 * **Counter-based per-walk RNG.**  Every random draw is keyed by
-  ``(base_key, walk_id, hop, round)`` via ``jax.random.fold_in`` — never by
-  call order.  A walk's trajectory is therefore a pure function of the task
+  ``(base_key, walk_id, hop, round)`` via the hand-rolled threefry folds in
+  :mod:`repro.kernels.rng` (bitwise ``jax.random.fold_in`` + ``uniform``) —
+  never by call order.  A walk's trajectory is therefore a pure function of the task
   seed and its walk id, independent of batch composition, view shape,
   loading decisions, pause/resume, or which engine advances it.  This is
   what makes {full, ondemand, auto} loading x {ram, disk} graph x
@@ -36,8 +37,12 @@ from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import rng
 
 __all__ = [
     "VID_PAD",
@@ -55,8 +60,6 @@ VID_PAD = jnp.iinfo(jnp.int32).max
 def remap_search_iters(n: int) -> int:
     """Binary-search depth for a remap (``vids``) segment of ``n`` entries —
     the single source of the ``v_iters`` static the kernel consumes."""
-    import numpy as np
-
     return int(np.ceil(np.log2(max(n, 2)))) + 1
 
 
@@ -121,6 +124,10 @@ def pair_advance_impl(
     """
     N = prev.shape[0]
     max_bias = jnp.maximum(1.0, jnp.maximum(1.0 / p, 1.0 / q))
+    # per-walk streams: fold the walk id in once, the hop/round per draw —
+    # all through the shared hand-rolled threefry (repro.kernels.rng), the
+    # same primitive the fused Pallas kernel lowers under Mosaic
+    kwid = rng.fold_in(*rng.key_halves(key), wid)
     # one spare "dump" column (max_len+1) absorbs writes of frozen walks
     trace0 = jnp.full((N, max_len + 2) if record else (1, 1), -1, dtype=jnp.int32)
     iota = jnp.arange(N)
@@ -153,9 +160,7 @@ def pair_advance_impl(
     def body(state):
         prev_, cur_, hop_, alive_, resident, slot, row, steps_, trace_, it = state
         # counter-based keys: one stream per (walk id, hop)
-        kw = jax.vmap(
-            lambda w, h: jax.random.fold_in(jax.random.fold_in(key, w), h),
-        )(wid, hop_)
+        kw0, kw1 = rng.fold_in(*kwid, hop_)
 
         movable = resident  # alive & cur has a row in the pair
         # (slot, row) for cur_ is carried from the previous iteration's
@@ -175,8 +180,7 @@ def pair_advance_impl(
         # ---- proposal + rejection over k_max rounds -------------------------
         def propose(kk, carry):
             z_, accepted_ = carry
-            kr = jax.vmap(lambda k_: jax.random.fold_in(k_, kk))(kw)
-            u123 = jax.vmap(lambda k_: jax.random.uniform(k_, (3,)))(kr).T
+            u123 = rng.uniform3(*rng.fold_in(kw0, kw1, kk))
             kloc = jnp.minimum((u123[0] * deg_c).astype(jnp.int32), deg_c - 1)
             idx = ind_base[slot] + row_start + kloc
             if has_alias:
@@ -201,7 +205,7 @@ def pair_advance_impl(
         z, _ = jax.lax.fori_loop(0, k_max, propose, (cur_, ~movable))
 
         # ---- commit ----------------------------------------------------------
-        u_term = jax.vmap(lambda k_: jax.random.uniform(jax.random.fold_in(k_, k_max)))(kw)
+        u_term = rng.uniform1(*rng.fold_in(kw0, kw1, k_max))
         new_hop = hop_ + movable.astype(jnp.int32)
         new_prev = jnp.where(movable, cur_, prev_)
         new_cur = jnp.where(movable, z, cur_)

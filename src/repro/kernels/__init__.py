@@ -1,11 +1,19 @@
 """Pallas TPU kernels for the walk engine hot-spots (+ jnp oracles)."""
 
+from . import rng
 from .bucket_hist import bucket_hist_kernel, bucket_hist_ref
 from .node2vec_ref import node2vec_step_ref
-from .node2vec_step import WALK_TILE, node2vec_step_kernel
 from .ops import alias_step, node2vec_step
+from .pair_advance import WALK_TILE, fused_advance_pair, pair_advance_kernel
 
 __all__ = [
-    "bucket_hist_kernel", "bucket_hist_ref", "node2vec_step_ref",
-    "node2vec_step_kernel", "node2vec_step", "alias_step", "WALK_TILE",
+    "bucket_hist_kernel",
+    "bucket_hist_ref",
+    "node2vec_step_ref",
+    "fused_advance_pair",
+    "pair_advance_kernel",
+    "node2vec_step",
+    "alias_step",
+    "WALK_TILE",
+    "rng",
 ]

@@ -33,15 +33,12 @@ def _kernel(ids_ref, valid_ref, out_ref, *, num_buckets: int):
     # one-hot [T, NB] in f32; reduce over T on the MXU (ones-vector matmul)
     oh = (ids[:, None] == jnp.arange(num_buckets)[None, :]) & valid[:, None]
     ones = jnp.ones((1, ids.shape[0]), jnp.float32)
-    counts = jnp.dot(
-        ones, oh.astype(jnp.float32), preferred_element_type=jnp.float32
-    )[0]
+    counts = jnp.dot(ones, oh.astype(jnp.float32), preferred_element_type=jnp.float32)[0]
     out_ref[...] += counts.astype(jnp.int32)
 
 
 def bucket_hist_kernel(
-    ids, valid, *, num_buckets: int, interpret: bool = True,
-    tile: int = HIST_TILE,
+    ids, valid, *, num_buckets: int, interpret: bool = True, tile: int = HIST_TILE
 ):
     """Count walks per bucket. ``ids``: [N] int32; ``valid``: [N] bool."""
     N = ids.shape[0]

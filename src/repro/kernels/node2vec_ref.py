@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the node2vec_step kernel (bit-exact same math)."""
+"""Independent pure-jnp oracle for one fused-kernel hop (view-pair layout).
+
+Deliberately shares *no* search code with the kernel or the engine impl:
+row lookup and neighborhood membership are dense comparison sweeps over the
+flat packed arrays (exact lower bounds, no binary search), so a bug in the
+fixed-iteration searches cannot cancel out of the comparison.  Uniforms are
+an explicit input — the caller supplies the counter-keyed draws (see
+:mod:`repro.kernels.rng`), keeping this a pure function.
+"""
 
 from __future__ import annotations
 
@@ -8,67 +16,74 @@ __all__ = ["node2vec_step_ref"]
 
 
 def node2vec_step_ref(
-    pair_start,
-    pair_nverts,
-    indptr,
-    indices,
-    alias_j,
-    alias_q,
-    prev,
-    cur,
-    hop,
-    active,
-    unif,
+    vids,      # [SV] i32 — both slots' sorted global vertex ids, concatenated
+    nverts,    # [2] i32
+    vid_base,  # [2] i32
+    indptr,    # [SP] i32
+    ptr_base,  # [2] i32
+    indices,   # [SE] i32
+    ind_base,  # [2] i32
+    alias_j,   # [SE] i32 ([1] dummy if not has_alias)
+    alias_q,   # [SE] f32
+    prev,      # [N] i32
+    cur,       # [N] i32
+    hop,       # [N] i32
+    active,    # [N] bool
+    unif,      # [N, k_max, 3] f32 — counter-keyed uniforms, caller-supplied
     *,
     p: float = 1.0,
     q: float = 1.0,
     order: int = 2,
     k_max: int = 4,
-    n_iters: int = 24,
     has_alias: bool = False,
 ):
-    """Same contract as ``node2vec_step_kernel`` (interpret or TPU)."""
-    ME = indices.shape[1]
-    flat_indices = indices.reshape(-1)
-    max_bias = max(1.0, 1.0 / p, 1.0 / q)
+    """One walk hop; same decision sequence as the fused kernel's loop body.
+    Returns ``(z, moved)``."""
+    pf, qf = jnp.float32(p), jnp.float32(q)
+    max_bias = jnp.maximum(1.0, jnp.maximum(1.0 / pf, 1.0 / qf))
     active = active.astype(bool)
+    v_ar = jnp.arange(vids.shape[0])
+    e_ar = jnp.arange(indices.shape[0])
 
     def locate(v):
-        in0 = (v >= pair_start[0]) & (v < pair_start[0] + pair_nverts[0])
-        slot = jnp.where(in0, 0, 1).astype(jnp.int32)
-        row = jnp.clip(v - pair_start[slot], 0, indptr.shape[1] - 2)
-        in1 = (v >= pair_start[1]) & (v < pair_start[1] + pair_nverts[1])
-        return slot, row, in0 | in1
+        """Dense exact lower bound per slot: row = #{vids in segment < v}."""
+        vcol = v[:, None]
+        seg0 = (v_ar >= vid_base[0]) & (v_ar < vid_base[0] + nverts[0])
+        seg1 = (v_ar >= vid_base[1]) & (v_ar < vid_base[1] + nverts[1])
+        row0 = jnp.sum(seg0 & (vids[None, :] < vcol), axis=1).astype(jnp.int32)
+        row1 = jnp.sum(seg1 & (vids[None, :] < vcol), axis=1).astype(jnp.int32)
+        found0 = jnp.any(seg0 & (vids[None, :] == vcol), axis=1)
+        found1 = jnp.any(seg1 & (vids[None, :] == vcol), axis=1)
+        slot = jnp.where(found0, 0, 1).astype(jnp.int32)
+        row = jnp.where(found0, row0, row1)
+        return slot, row, found0 | found1
 
     slot, row, resident = locate(cur)
-    row_start = indptr[slot, row]
-    deg = indptr[slot, row + 1] - row_start
+    row_start = indptr[ptr_base[slot] + row]
+    deg = indptr[ptr_base[slot] + row + 1] - row_start
     movable = active & resident & (deg > 0)
     deg_c = jnp.maximum(deg, 1)
 
     if order == 2:
         uslot, urow, _ = locate(prev)
-        u_start = indptr[uslot, urow]
-        ulo = uslot * ME + u_start
-        uhi = ulo + (indptr[uslot, urow + 1] - u_start)
-
-    from repro.core.sampling import searchsorted_rows
+        u_start = indptr[ptr_base[uslot] + urow]
+        ulo = ind_base[uslot] + u_start
+        uhi = ulo + (indptr[ptr_base[uslot] + urow + 1] - u_start)
 
     z = cur
     accepted = ~movable
     for kk in range(k_max):
         u1, u2, u3 = unif[:, kk, 0], unif[:, kk, 1], unif[:, kk, 2]
         kloc = jnp.minimum((u1 * deg_c).astype(jnp.int32), deg_c - 1)
-        idx = slot * ME + row_start + kloc
+        idx = ind_base[slot] + row_start + kloc
         if has_alias:
-            kloc = jnp.where(
-                u2 >= alias_q.reshape(-1)[idx], alias_j.reshape(-1)[idx], kloc
-            )
-            idx = slot * ME + row_start + kloc
-        zk = flat_indices[idx]
+            kloc = jnp.where(u2 >= alias_q[idx], alias_j[idx], kloc)
+            idx = ind_base[slot] + row_start + kloc
+        zk = indices[idx]
         if order == 2:
-            memb = searchsorted_rows(flat_indices, ulo, uhi, zk, n_iters=n_iters)
-            bias = jnp.where(zk == prev, 1.0 / p, jnp.where(memb, 1.0, 1.0 / q))
+            in_row = (e_ar >= ulo[:, None]) & (e_ar < uhi[:, None])
+            memb = jnp.any(in_row & (indices[None, :] == zk[:, None]), axis=1)
+            bias = jnp.where(zk == prev, 1.0 / pf, jnp.where(memb, 1.0, 1.0 / qf))
             acc_p = jnp.where(hop == 0, 1.0, bias / max_bias)
         else:
             acc_p = jnp.ones_like(u3)

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.walk --task rwnv --vertices 5000 \
         --engine biblock [--engine sogw|sgsc|pb|oracle] [--p 4 --q 0.25] \
         [--graph-backend disk --graph-dir /path/to/dir] [--pool disk] \
-        [--no-async-pipeline] [--writer-queue 64] [--pool-shards 4]
+        [--no-async-pipeline] [--writer-queue 64] [--pool-shards 4] \
+        [--advance pallas]
 
 Prints the paper's headline statistics (block/vertex/on-demand I/Os,
 simulated I/O + exec time) as one CSV row per engine.
@@ -74,6 +75,14 @@ def main():
         "shard counts)",
     )
     ap.add_argument(
+        "--advance",
+        default="jax",
+        choices=("jax", "pallas"),
+        help="UpdateWalk lowering: the plain jitted JAX advance or the "
+        "fused Pallas multi-hop kernel (repro.kernels.pair_advance; "
+        "interpret mode off-TPU) — walks are bit-identical either way",
+    )
+    ap.add_argument(
         "--graph-backend",
         default="ram",
         choices=("ram", "disk"),
@@ -129,6 +138,7 @@ def main():
         pool=args.pool,
         pool_flush_walks=args.pool_flush_walks,
         prefetch=not args.no_prefetch,
+        advance_impl=args.advance,
     )
     biblock_kw = dict(
         pool_kw,

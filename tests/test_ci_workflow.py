@@ -74,6 +74,9 @@ def test_bench_smoke_runs_matrix_and_uploads_artifact(wf):
     # ... and so does the sharded-pool entry (identical CRCs + invariant
     # charges across pool_shards {1,2,4,8}, real per-shard writers)
     assert any("sharded_pool" in r and "--json" in r for r in runs)
+    # ... and the fused-advance entry (pallas vs jax advance: identical walk
+    # CRCs and charges, us_per_call for both impls in the report)
+    assert any("fused_advance" in r and "--json" in r for r in runs)
     assert any("--pool disk" in r and "--graph-backend disk" in r for r in runs)
     uploads = [s for s in job["steps"] if "upload-artifact" in str(s.get("uses", ""))]
     assert len(uploads) == 1

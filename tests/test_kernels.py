@@ -1,4 +1,10 @@
-"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/param sweeps."""
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/param sweeps.
+
+The fused advance kernel is validated two independent ways: single-hop
+against the dense ``node2vec_step_ref`` oracle fed explicit counter-keyed
+uniforms, and multi-hop against the plain jitted ``pair_advance_impl`` —
+both bitwise.
+"""
 
 import numpy as np
 import pytest
@@ -7,92 +13,127 @@ import jax.numpy as jnp
 from repro.testing import given, settings, st
 
 from repro.core import erdos_renyi, partition_into_n_blocks
+from repro.core.graph import BlockView
+from repro.engines.base import ResidentPair
+from repro.engines.step import advance_pair
 from repro.kernels import (
     alias_step,
     bucket_hist_kernel,
     bucket_hist_ref,
+    fused_advance_pair,
     node2vec_step,
-    node2vec_step_kernel,
     node2vec_step_ref,
+    rng,
 )
 
 
 def _pair_args(n_verts=500, n_edges=3500, nb=4, b0=0, b1=2, weighted=False, seed=1):
     g = erdos_renyi(n_verts, n_edges, seed=seed)
     if weighted:
-        rng = np.random.default_rng(seed)
+        r = np.random.default_rng(seed)
         from repro.core import CSRGraph
 
         g = CSRGraph(g.indptr, g.indices,
-                     (rng.random(g.num_edges) + 0.1).astype(np.float32))
+                     (r.random(g.num_edges) + 0.1).astype(np.float32))
     bg = partition_into_n_blocks(g, nb)
     if weighted:
-        bg._build_alias = True
-    a, b = bg.materialize_block(b0), bg.materialize_block(b1)
-    pair_start = jnp.array([a.start, b.start], jnp.int32)
-    pair_nverts = jnp.array([a.nverts, b.nverts], jnp.int32)
-    indptr = jnp.stack([jnp.asarray(a.indptr), jnp.asarray(b.indptr)])
-    indices = jnp.stack([jnp.asarray(a.indices), jnp.asarray(b.indices)])
-    if weighted and a.alias_j is not None:
-        aj = jnp.stack([jnp.asarray(a.alias_j), jnp.asarray(b.alias_j)])
-        aq = jnp.stack([jnp.asarray(a.alias_q), jnp.asarray(b.alias_q)])
-    else:
-        aj = jnp.zeros_like(indices)
-        aq = jnp.ones(indices.shape, jnp.float32)
-    return bg, (pair_start, pair_nverts, indptr, indices, aj, aq)
+        bg.ensure_alias()
+    rp = ResidentPair(bg, has_alias=weighted)
+    rp.set_slot(0, BlockView.from_resident(bg.materialize_block(b0)))
+    rp.set_slot(1, BlockView.from_resident(bg.materialize_block(b1)))
+    pair, v_iters = rp.device_args()
+    return bg, pair, v_iters
+
+
+def _counter_unif(key, wid, hop, k_max):
+    """The engine's draw schedule, materialized: (key, wid, hop, round)."""
+    kw0, kw1 = rng.fold_in(*rng.fold_in(*rng.key_halves(key), wid), hop)
+    return jnp.stack(
+        [jnp.stack(rng.uniform3(*rng.fold_in(kw0, kw1, kk)), axis=-1)
+         for kk in range(k_max)],
+        axis=1,
+    )
 
 
 @pytest.mark.parametrize("p,q", [(1.0, 1.0), (4.0, 0.25), (0.25, 4.0)])
 @pytest.mark.parametrize("n_walks", [256, 1024])
-def test_node2vec_kernel_matches_ref(p, q, n_walks):
-    bg, pair = _pair_args()
-    rng = np.random.default_rng(0)
-    s0, e0 = bg.block_starts[0], bg.block_starts[1]
-    cur = jnp.asarray(rng.integers(s0, e0, n_walks).astype(np.int32))
-    s1, e1 = bg.block_starts[2], bg.block_starts[3]
-    prev = jnp.asarray(rng.integers(s1, e1, n_walks).astype(np.int32))
-    hop = jnp.asarray(rng.integers(0, 6, n_walks).astype(np.int32))
-    active = jnp.asarray(rng.random(n_walks) < 0.9)
-    unif = jax.random.uniform(jax.random.PRNGKey(7), (n_walks, 4, 3))
-    kw = dict(p=p, q=q, k_max=4, n_iters=16)
-    zk, mk = node2vec_step_kernel(*pair, prev, cur, hop, active, unif,
-                                  interpret=True, walk_tile=256, **kw)
-    zr, mr = node2vec_step_ref(*pair, prev, cur, hop, active, unif, **kw)
+def test_fused_single_hop_matches_dense_ref(p, q, n_walks):
+    bg, pair, v_iters = _pair_args()
+    r = np.random.default_rng(0)
+    cur = jnp.asarray(r.integers(bg.block_starts[0], bg.block_starts[1], n_walks).astype(np.int32))
+    prev = jnp.asarray(r.integers(bg.block_starts[2], bg.block_starts[3], n_walks).astype(np.int32))
+    hop = jnp.asarray(r.integers(0, 6, n_walks).astype(np.int32))
+    active = jnp.asarray(r.random(n_walks) < 0.9)
+    wid = jnp.asarray(r.integers(0, 1 << 20, n_walks).astype(np.int32))
+    key = jax.random.PRNGKey(7)
+    kw = dict(p=p, q=q, k_max=4, n_iters=16, v_iters=v_iters)
+    zk, mk = node2vec_step(*pair, wid, prev, cur, hop, active, key,
+                           use_kernel=True, interpret=True, walk_tile=256, **kw)
+    unif = _counter_unif(key, wid, hop, 4)
+    zr, mr = node2vec_step_ref(*pair, prev, cur, hop, active, unif,
+                               p=p, q=q, k_max=4)
     np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
     np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
 
 
-def test_node2vec_kernel_weighted_alias_path():
-    bg, pair = _pair_args(weighted=True)
-    rng = np.random.default_rng(3)
+def test_fused_kernel_weighted_alias_path():
+    bg, pair, v_iters = _pair_args(weighted=True)
+    r = np.random.default_rng(3)
     n = 512
-    s0, e0 = bg.block_starts[0], bg.block_starts[1]
-    cur = jnp.asarray(rng.integers(s0, e0, n).astype(np.int32))
-    prev = jnp.asarray(rng.integers(bg.block_starts[2], bg.block_starts[3], n).astype(np.int32))
+    cur = jnp.asarray(r.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32))
+    prev = jnp.asarray(r.integers(bg.block_starts[2], bg.block_starts[3], n).astype(np.int32))
+    wid = jnp.arange(n, dtype=jnp.int32)
     hop = jnp.ones(n, jnp.int32)
     active = jnp.ones(n, bool)
-    unif = jax.random.uniform(jax.random.PRNGKey(1), (n, 2, 3))
-    kw = dict(p=0.5, q=2.0, k_max=2, n_iters=16, has_alias=True)
-    zk, mk = node2vec_step_kernel(*pair, prev, cur, hop, active, unif,
-                                  interpret=True, **kw)
-    zr, mr = node2vec_step_ref(*pair, prev, cur, hop, active, unif, **kw)
+    key = jax.random.PRNGKey(1)
+    kw = dict(p=0.5, q=2.0, k_max=2, n_iters=16, v_iters=v_iters, has_alias=True)
+    zk, mk = node2vec_step(*pair, wid, prev, cur, hop, active, key,
+                           use_kernel=True, interpret=True, **kw)
+    unif = _counter_unif(key, wid, hop, 2)
+    zr, mr = node2vec_step_ref(*pair, prev, cur, hop, active, unif,
+                               p=0.5, q=2.0, k_max=2, has_alias=True)
     np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+
+
+def test_fused_multi_hop_matches_jax_impl():
+    """The tentpole equality: whole multi-hop advance, kernel vs plain jit."""
+    bg, pair, v_iters = _pair_args(b0=0, b1=1)
+    r = np.random.default_rng(5)
+    n = 384  # not a multiple of the tile — exercises lane padding
+    cur = jnp.asarray(r.integers(bg.block_starts[0], bg.block_starts[2], n).astype(np.int32))
+    prev = jnp.asarray(r.integers(bg.block_starts[0], bg.block_starts[2], n).astype(np.int32))
+    hop = jnp.asarray(r.integers(0, 4, n).astype(np.int32))
+    alive = jnp.asarray(r.random(n) < 0.95)
+    wid = jnp.asarray(r.integers(0, 1 << 20, n).astype(np.int32))
+    key = jax.random.PRNGKey(11)
+    sc = (jnp.int32(10), jnp.float32(0.9), jnp.float32(4.0), jnp.float32(0.25))
+    kw = dict(order=2, k_max=8, n_iters=16, v_iters=v_iters,
+              record=True, has_alias=False, max_len=10)
+    ref = advance_pair(*pair, wid, prev, cur, hop, alive, key, *sc, **kw)
+    fus = fused_advance_pair(*pair, wid, prev, cur, hop, alive, key, *sc, **kw,
+                             interpret=True, walk_tile=256)
+    for a, b in zip(ref, fus):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_ops_wrapper_pads_and_dispatches():
-    bg, pair = _pair_args()
-    rng = np.random.default_rng(0)
+    bg, pair, v_iters = _pair_args()
+    r = np.random.default_rng(0)
     n = 300  # not a multiple of the tile
-    s0, e0 = bg.block_starts[0], bg.block_starts[1]
-    cur = jnp.asarray(rng.integers(s0, e0, n).astype(np.int32))
+    cur = jnp.asarray(r.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32))
     prev = cur
+    wid = jnp.arange(n, dtype=jnp.int32)
     hop = jnp.zeros(n, jnp.int32)
     active = jnp.ones(n, bool)
     k = jax.random.PRNGKey(0)
-    zk, mk = node2vec_step(*pair, prev, cur, hop, active, k,
-                           use_kernel=True, interpret=True, walk_tile=256)
-    zr, mr = node2vec_step(*pair, prev, cur, hop, active, k, use_kernel=False)
+    zk, mk = node2vec_step(*pair, wid, prev, cur, hop, active, k,
+                           v_iters=v_iters, use_kernel=True,
+                           interpret=True, walk_tile=256)
+    zr, mr = node2vec_step(*pair, wid, prev, cur, hop, active, k,
+                           v_iters=v_iters, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
     assert zk.shape == (n,)
     # sampled vertices are real neighbors of cur
     g = bg.graph
@@ -103,14 +144,16 @@ def test_ops_wrapper_pads_and_dispatches():
 
 
 def test_alias_step_first_order():
-    bg, pair = _pair_args()
-    rng = np.random.default_rng(0)
+    bg, pair, v_iters = _pair_args()
+    r = np.random.default_rng(0)
     n = 256
     cur = jnp.asarray(
-        rng.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32)
+        r.integers(bg.block_starts[0], bg.block_starts[1], n).astype(np.int32)
     )
-    z, moved = alias_step(*pair, cur, jnp.ones(n, bool), jax.random.PRNGKey(2),
-                          has_alias=False, interpret=True, walk_tile=256)
+    wid = jnp.arange(n, dtype=jnp.int32)
+    z, moved = alias_step(*pair, wid, cur, jnp.ones(n, bool), jax.random.PRNGKey(2),
+                          v_iters=v_iters, has_alias=False,
+                          interpret=True, walk_tile=256)
     g = bg.graph
     zs = np.asarray(z)
     for i in range(0, n, 17):
@@ -124,9 +167,9 @@ def test_alias_step_first_order():
 )
 @settings(max_examples=10, deadline=None)
 def test_bucket_hist_property(n, nb, seed):
-    rng = np.random.default_rng(seed)
-    ids = jnp.asarray(rng.integers(0, nb, n).astype(np.int32))
-    valid = jnp.asarray(rng.random(n) < 0.7)
+    r = np.random.default_rng(seed)
+    ids = jnp.asarray(r.integers(0, nb, n).astype(np.int32))
+    valid = jnp.asarray(r.random(n) < 0.7)
     hk = bucket_hist_kernel(ids, valid, num_buckets=nb, interpret=True)
     hr = bucket_hist_ref(ids, valid, num_buckets=nb)
     np.testing.assert_array_equal(np.asarray(hk), np.asarray(hr))
