@@ -1,12 +1,19 @@
-"""Second-order PageRank queries (PRNV, Wu et al. 2016) with GraSorw.
+"""Second-order PageRank point queries through the serving layer.
 
-Runs walk-with-restart queries for several seed vertices under different
-Node2vec (p, q) settings — the paper's §7.6.1 sensitivity axis — and
-compares the bi-block engine against the in-memory oracle.
+The original version of this example drove PRNV (Wu et al. 2016) as batch
+runs — one engine run per (seed vertex, Node2vec setting).  It now issues
+the same queries as *point queries* through `repro.serve.WalkQueryServer`:
+queries sharing a (p, q) setting admission-batch into one bi-block sweep,
+the hot-set policy pins the traffic's hottest blocks, and each answer's
+normalized endpoint multiset is the Monte-Carlo PPR estimate.  The
+in-memory oracle comparison is kept: every query's served estimate is
+checked against a dedicated oracle PRNV run by total-variation distance.
 
-    PYTHONPATH=src python examples/pagerank_query.py
+    PYTHONPATH=src python examples/pagerank_query.py [--vertices 3000]
+        [--samples 256] [--length 20] [--hot-blocks 2]
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -14,31 +21,70 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import (
-    BiBlockEngine,
-    InMemoryWalker,
-    barabasi_albert,
-    partition_into_n_blocks,
-    prnv_task,
-)
+from repro.core import InMemoryWalker, barabasi_albert, partition_into_n_blocks, prnv_task
+from repro.serve import QueryConfig, WalkQueryServer
 
 
 def main():
-    g = barabasi_albert(3000, 6, seed=0)
-    bg = partition_into_n_blocks(g, 5)
-    queries = [0, 17, 256]
-    for p, q in ((1.0, 1.0), (4.0, 0.25), (0.25, 4.0)):
-        print(f"\n=== Node2vec(p={p}, q={q}) ===")
-        for v in queries:
-            task = prnv_task(v, g.num_vertices, p=p, q=q, samples_per_vertex=2)
-            res = BiBlockEngine(bg, task).run()
-            oracle = InMemoryWalker(bg, task).run(record_walks=False)
-            ppr = res.ppr_estimate()
-            top = np.argsort(-ppr)[:5]
-            tv = 0.5 * np.abs(ppr - oracle.ppr_estimate()).sum()
-            print(f"  query {v:5d}: top5={[int(t) for t in top]}  "
-                  f"sim_wall={res.stats.sim_wall_time*1e3:.1f} ms  "
-                  f"TV(engine, oracle)={tv:.3f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vertices", type=int, default=3000)
+    ap.add_argument("--blocks", type=int, default=5)
+    ap.add_argument("--samples", type=int, default=256, help="walks per query")
+    ap.add_argument("--length", type=int, default=20)
+    ap.add_argument("--hot-blocks", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    g = barabasi_albert(args.vertices, 6, seed=args.seed)
+    bg = partition_into_n_blocks(g, args.blocks)
+    queries = [0, 17, min(256, args.vertices - 1)]
+    settings = ((1.0, 1.0), (4.0, 0.25), (0.25, 4.0))
+
+    with WalkQueryServer(bg, hot_blocks=args.hot_blocks, seed=args.seed) as server:
+        configs = {}
+        for p, q in settings:
+            cfg = QueryConfig(p=p, q=q, length=args.length, samples=args.samples)
+            configs[(p, q)] = cfg
+            for v in queries:
+                server.submit(v, cfg)
+        # one flush serves all three configs, one admission batch each
+        answers = {a.qid: a for a in server.flush()}
+
+        qid = 0
+        for p, q in settings:
+            print(f"\n=== Node2vec(p={p}, q={q}) ===")
+            for v in queries:
+                a = answers[qid]
+                qid += 1
+                # oracle reference: a dense PRNV estimate from the same vertex
+                task = prnv_task(
+                    v,
+                    g.num_vertices,
+                    p=p,
+                    q=q,
+                    length=args.length,
+                    samples_per_vertex=2,
+                    seed=args.seed + 1,
+                )
+                oracle = InMemoryWalker(bg, task).run(record_walks=False)
+                served = a.dense_counts(g.num_vertices) / max(int(a.counts.sum()), 1)
+                tv = 0.5 * np.abs(served - oracle.ppr_estimate()).sum()
+                print(
+                    f"  query {v:5d}: top5={[t for t, _ in a.top(5)]}  "
+                    f"latency={a.latency * 1e3:.1f} ms  "
+                    f"TV(served, oracle)={tv:.3f}"
+                )
+        s = server.stats
+        lat = server.latency_summary()
+        print(
+            f"\nserved {lat['answered']} queries in {server.batches_served} "
+            f"admission batches: p50={lat['p50'] * 1e3:.1f} ms  "
+            f"p95={lat['p95'] * 1e3:.1f} ms"
+        )
+        print(
+            f"block loads={s.block_ios}  pinned hits={s.pinned_block_hits}  "
+            f"bytes saved={s.pinned_bytes_saved}"
+        )
 
 
 if __name__ == "__main__":

@@ -43,17 +43,22 @@ def main():
         batch["prefix"] = jnp.zeros((B, cfg.num_prefix, cfg.d_model), cfg.dtype)
     if cfg.is_encoder_decoder:
         batch["frames"] = jnp.asarray(
-            rng.standard_normal((B, P, cfg.d_model)).astype(np.float32))
+            rng.standard_normal((B, P, cfg.d_model)).astype(np.float32)
+        )
 
     max_len = P + args.new_tokens + (cfg.num_prefix if cfg.frontend == "vision" else 0)
     t0 = time.time()
     logits, pcaches = model_prefill(params, batch, cfg)
-    print(f"prefill: batch={B} len={P} in {time.time()-t0:.2f}s")
+    print(f"prefill: batch={B} len={P} in {time.time() - t0:.2f}s")
 
     # pad prefill caches into the fixed decode buffers
     target = model_caches(cfg, B, max_len, enc_len=P)
-    pad = lambda got, tgt: got if got.shape == tgt.shape else jnp.pad(
-        got, [(0, t - g) for g, t in zip(got.shape, tgt.shape)])
+
+    def pad(got, tgt):
+        if got.shape == tgt.shape:
+            return got
+        return jnp.pad(got, [(0, t - g) for g, t in zip(got.shape, tgt.shape)])
+
     caches = jax.tree.map(pad, pcaches, target)
 
     decode = jax.jit(make_decode_step(cfg), static_argnums=())
@@ -62,14 +67,15 @@ def main():
     pos = P + (cfg.num_prefix if cfg.frontend == "vision" else 0)
     t0 = time.time()
     for i in range(args.new_tokens - 1):
-        tok, _, caches = decode(params, {"token": tok,
-                                         "cache_len": jnp.int32(pos + i)}, caches)
+        tok, _, caches = decode(params, {"token": tok, "cache_len": jnp.int32(pos + i)}, caches)
         tok = tok[:, None]
         out.append(tok)
     dt = time.time() - t0
     seqs = np.concatenate([np.asarray(t) for t in out], axis=1)
-    print(f"decoded {args.new_tokens} tokens/seq in {dt:.2f}s "
-          f"({B * args.new_tokens / dt:.1f} tok/s)")
+    print(
+        f"decoded {args.new_tokens} tokens per seq in {dt:.2f}s "
+        f"({B * args.new_tokens / dt:.1f} tok/s)"
+    )
     for b in range(B):
         print(f"  seq {b}: {seqs[b].tolist()}")
 

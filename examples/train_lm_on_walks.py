@@ -6,7 +6,7 @@ params so a few hundred CPU steps are feasible) trained on vertex-token
 sequences with the resilient trainer (checkpoint/restart, straggler
 watchdog).
 
-    PYTHONPATH=src python examples/train_lm_on_walks.py [--steps 300]
+    PYTHONPATH=src python examples/train_lm_on_walks.py [--steps 300] [--tiny]
 """
 
 import argparse
@@ -32,10 +32,36 @@ from repro.train import make_train_step
 def lm_100m(vocab: int) -> ModelConfig:
     """~100M llama-family config (8L x 768, GQA 12/4)."""
     return ModelConfig(
-        name="walklm-100m", d_model=768, n_layers=8, n_heads=12, n_kv_heads=4,
-        head_dim=64, d_ff=2048, vocab_size=vocab,
-        segments=((("attn+mlp",), 8),), mlp_type="swiglu",
-        dtype=jnp.float32, remat_policy="none",
+        name="walklm-100m",
+        d_model=768,
+        n_layers=8,
+        n_heads=12,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=vocab,
+        segments=((("attn+mlp",), 8),),
+        mlp_type="swiglu",
+        dtype=jnp.float32,
+        remat_policy="none",
+    )
+
+
+def lm_tiny(vocab: int) -> ModelConfig:
+    """Micro config for smoke runs (2L x 128) — same code path, seconds to train."""
+    return ModelConfig(
+        name="walklm-tiny",
+        d_model=128,
+        n_layers=2,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=vocab,
+        segments=((("attn+mlp",), 2),),
+        mlp_type="swiglu",
+        dtype=jnp.float32,
+        remat_policy="none",
     )
 
 
@@ -46,29 +72,39 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/walklm_ckpt")
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="micro model and short walks: the full pipeline end to end in seconds",
+    )
     args = ap.parse_args()
 
     print("phase 1: walk generation (GraSorw bi-block engine)")
     g = erdos_renyi(args.vertices, args.vertices * 8, seed=0)
     bg = partition_into_n_blocks(g, 6)
-    task = rwnv_task(walks_per_vertex=4, length=40, seed=0)
+    walk_len = 10 if args.tiny else 40
+    task = rwnv_task(walks_per_vertex=4, length=walk_len, seed=0)
     t0 = time.time()
     res = BiBlockEngine(bg, task, record_walks=True).run()
-    print(f"  {res.num_walks:,} walks x {task.length} steps in "
-          f"{time.time()-t0:.1f}s wall ({res.stats.block_ios} block I/Os)")
+    print(
+        f"  {res.num_walks:,} walks x {task.length} steps in "
+        f"{time.time() - t0:.1f}s wall ({res.stats.block_ios} block I/Os)"
+    )
     corpus = WalkCorpus.from_walks(res.corpus, g.num_vertices)
 
     print("phase 2: LM training on the walk corpus")
-    cfg = lm_100m(corpus.vocab_size)
+    cfg = lm_tiny(corpus.vocab_size) if args.tiny else lm_100m(corpus.vocab_size)
     params = model_init(jax.random.PRNGKey(0), cfg)
     n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
-    print(f"  model: {cfg.name}  params={n/1e6:.1f}M")
+    print(f"  model: {cfg.name}  params={n / 1e6:.1f}M")
     opt_cfg = OptConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
     step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
     opt = adamw_init(params)
 
     trainer = ResilientTrainer(
-        train_step=step, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        train_step=step,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
         heartbeat_path=Path(args.ckpt_dir) / "heartbeat",
     )
     resumed = None
@@ -88,16 +124,24 @@ def main():
     def on_metrics(s, m):
         losses.append(m["loss"])
         if s % 20 == 0:
-            print(f"  step {s:4d}  loss {m['loss']:.4f}  "
-                  f"lr {m['lr']:.2e}  {m['step_time']*1e3:.0f} ms"
-                  + ("  [straggler]" if m["straggler"] else ""))
+            tail = "  [straggler]" if m["straggler"] else ""
+            print(
+                f"  step {s:4d}  loss {m['loss']:.4f}  "
+                f"lr {m['lr']:.2e}  {m['step_time'] * 1e3:.0f} ms{tail}"
+            )
 
     params, opt, info = trainer.run(
-        params, opt, corpus.batches(args.batch, args.seq, cursor=cursor, seed=1),
-        num_steps=args.steps, start_step=start, on_metrics=on_metrics,
+        params,
+        opt,
+        corpus.batches(args.batch, args.seq, cursor=cursor, seed=1),
+        num_steps=args.steps,
+        start_step=start,
+        on_metrics=on_metrics,
     )
-    print(f"done: step {info['step']}  final loss {losses[-1]:.4f}  "
-          f"(first {losses[0]:.4f}); stragglers flagged: {len(info['stragglers'])}")
+    print(
+        f"done: step {info['step']}  final loss {losses[-1]:.4f}  "
+        f"(first {losses[0]:.4f}); stragglers flagged: {len(info['stragglers'])}"
+    )
 
 
 if __name__ == "__main__":

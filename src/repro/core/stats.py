@@ -62,6 +62,9 @@ class IOStats:
         self.walk_bytes_read = 0
         self.ondemand_ios = 0
         self.ondemand_bytes = 0
+        self.hot_pinned_blocks = 0
+        self.pinned_block_hits = 0
+        self.pinned_bytes_saved = 0
         self.peak_resident_bytes = 0
         self.overlapped_load_bytes = 0
         self.pipeline_stall_slots = 0
@@ -98,6 +101,22 @@ class IOStats:
         self.ondemand_ios += n_vertices
         self.ondemand_bytes += nbytes
         self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
+
+    def note_hot_set(self, n_blocks: int) -> None:
+        """Gauge: blocks currently pinned resident by the
+        :class:`~repro.io.BlockStore` hot-set policy (serving layer).  Set
+        at every (program-ordered) pinning decision, so the value reflects
+        the final policy state, never thread timing."""
+        self.hot_pinned_blocks = int(n_blocks)
+
+    def note_pinned_hit(self, nbytes: int) -> None:
+        """Counter: a charged ``get`` served from the pinned hot set.  The
+        ``block_load`` charge is *skipped* — the block never re-crossed the
+        slow/fast boundary — and the avoided bytes accumulate in
+        ``pinned_bytes_saved``.  Deterministic: pinned membership and the
+        access sequence are both program-order pure."""
+        self.pinned_block_hits += 1
+        self.pinned_bytes_saved += int(nbytes)
 
     def note_resident(self, nbytes: int) -> None:
         """Gauge: bytes of graph data resident in "memory" (the device view
@@ -195,6 +214,9 @@ class IOStats:
             "vertex_bytes": self.vertex_bytes,
             "ondemand_ios": self.ondemand_ios,
             "ondemand_bytes": self.ondemand_bytes,
+            "hot_pinned_blocks": self.hot_pinned_blocks,
+            "pinned_block_hits": self.pinned_block_hits,
+            "pinned_bytes_saved": self.pinned_bytes_saved,
             "walk_ios": self.walk_ios,
             "walk_bytes": self.walk_bytes,
             "walk_bytes_written": self.walk_bytes_written,

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Optional, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
 import numpy as np
 
@@ -204,10 +204,28 @@ class EngineBase:
         pool_shards: int = 1,
         advance_impl: str = "jax",
         advance_interpret: bool = True,
+        stats: Optional[IOStats] = None,
+        block_store: Optional[BlockStore] = None,
+        initial_walks: Optional[np.ndarray] = None,
+        on_retire: Optional[Callable[[np.ndarray, np.ndarray], None]] = None,
+        hot_blocks=None,
     ):
         self.bg = bg
         self.task = task
-        self.stats = IOStats(preset)
+        # the serving seams: a query front end (repro.serve) passes a shared
+        # IOStats + BlockStore so charges (and the hot-set pinning savings)
+        # accumulate across the engine runs it drives, injects the admitted
+        # queries' walk sources as `initial_walks`, and observes per-walk
+        # terminations through `on_retire` to attribute endpoints per query
+        if stats is None and block_store is not None:
+            stats = block_store.stats
+        self.stats = IOStats(preset) if stats is None else stats
+        if block_store is not None and block_store.stats is not self.stats:
+            raise ValueError(
+                "a shared block_store must charge through the engine's IOStats "
+                "(pass the store's stats, or no stats at all)"
+            )
+        self.on_retire = on_retire
         self.record_walks = record_walks
         self.k_max = k_max if isinstance(task.model, Node2vec) else 1
         if isinstance(task.model, Node2vec) and task.model.p == task.model.q == 1.0:
@@ -233,7 +251,10 @@ class EngineBase:
         self._base_key = jax.random.PRNGKey(self.seed)
         V = bg.num_vertices
         self.endpoint_counts = np.zeros(V, np.int64)
-        src = task.initial_walks(V)
+        if initial_walks is None:
+            src = task.initial_walks(V)
+        else:
+            src = np.asarray(initial_walks, dtype=np.int64)
         self.num_walks = src.shape[0]
         self.corpus = (
             np.full((self.num_walks, task.length + 1), -1, np.int32)
@@ -282,12 +303,19 @@ class EngineBase:
             )
             if self.async_pipeline and not isinstance(self.pool, (AsyncWalkPool, ShardedWalkPool)):
                 self.pool = AsyncWalkPool(self.pool, stats=self.stats, max_queue=writer_queue)
-        self.blocks = BlockStore(
-            bg,
-            self.stats,
-            enable_prefetch=prefetch,
-            capacity=max(block_cache_blocks, 2),
-        )
+        if block_store is not None:
+            self.blocks = block_store
+            self._owns_blocks = False
+        else:
+            self.blocks = BlockStore(
+                bg,
+                self.stats,
+                enable_prefetch=prefetch,
+                capacity=max(block_cache_blocks, 2),
+            )
+            self._owns_blocks = True
+        if hot_blocks is not None:
+            self.blocks.pin(hot_blocks)
         self._pending_init_src = src
         self.unfinished = self.num_walks
         self.pair = ResidentPair(bg, self.has_alias, self.stats)
@@ -313,6 +341,8 @@ class EngineBase:
         if done.any():
             ends = batch.cur[done]
             np.add.at(self.endpoint_counts, ends, 1)
+            if self.on_retire is not None:
+                self.on_retire(wid[done], ends)
             self.unfinished -= int(done.sum())
         keep = alive
         return batch.select(keep), wid[keep]
@@ -424,7 +454,8 @@ class EngineBase:
         if self._closed:
             return
         self._closed = True
-        self.blocks.close()
+        if self._owns_blocks:
+            self.blocks.close()
         self.pool.close()
 
     def __enter__(self) -> "EngineBase":

@@ -20,6 +20,14 @@ splits the *next* slot's pool, and the block-store prefetch thread builds
 the next slot's current view and the next bucket's ancillary view.  With
 ``async_pipeline=False`` (the serial reference mode) every stage runs
 inline; the counter-based per-walk RNG makes the two modes bit-identical.
+
+The engine is also the execution tier of the query-serving front end
+(:mod:`repro.serve`): an admission batch of point queries becomes one run
+with its concatenated walk sources injected via ``initial_walks``, a
+shared ``block_store`` (hot-set pinned) + ``stats``, and an ``on_retire``
+hook attributing each terminating walk's endpoint back to its query — all
+:class:`~repro.engines.base.EngineBase` seams, so serving rides the exact
+triangular sweep (and bit-exact walks) of a batch run.
 """
 
 from __future__ import annotations

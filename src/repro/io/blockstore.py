@@ -31,6 +31,22 @@ Prefetching never charges, so the deterministic I/O counts (the paper's
 tables) are identical with prefetch on or off.  Prefetch wins show up as
 real wall-clock overlap, counted in :attr:`prefetch_hits` /
 :attr:`partial_prefetch_hits`.
+
+**Hot-set policy** (serving layer; ROADMAP "walk-query serving").  The
+query-serving front end (:mod:`repro.serve`) observes which blocks its
+query sources land in and :meth:`pin`\\ s the high-traffic ones.  A pinned
+block is materialised (and charged) once, then held *resident outside the
+LRU* — eviction only ever governs the cold tail — and every later charged
+:meth:`get` is served from the pinned copy **without** a ``block_load``
+charge: the block genuinely never re-crosses the slow/fast boundary, which
+is the whole point of serving hot traffic from memory (§4.2's bucket
+economics turned into a latency story; ThunderRW's in-memory regime on the
+hot set, graceful degradation to disk on the cold tail).  The skipped
+charges are metered as deterministic gauges (``IOStats.pinned_block_hits``
+/ ``pinned_bytes_saved``; ``hot_pinned_blocks`` tracks the policy state) —
+pinned membership and the access sequence are program-order pure, so the
+savings are exactly reproducible.  Batch engines pin nothing, so their
+accounting (the paper's tables) is untouched.
 """
 
 from __future__ import annotations
@@ -74,6 +90,9 @@ class BlockStore:
         self.capacity = capacity
         self.enable_prefetch = enable_prefetch
         self._cache: "OrderedDict[int, ResidentBlock]" = OrderedDict()
+        # hot set: block id -> resident copy (None until first touch);
+        # pinned blocks live outside the LRU and are exempt from eviction
+        self._pinned: "OrderedDict[int, Optional[ResidentBlock]]" = OrderedDict()
         self._futures: Dict[int, Future] = {}
         # one pending partial-view build per block (consumed by partial_view)
         self._pfutures: Dict[int, Future] = {}
@@ -87,6 +106,7 @@ class BlockStore:
         self.partial_prefetch_issued = 0
         self.partial_prefetch_hits = 0
         self.partial_builds = 0
+        self.pinned_hits = 0
         #: wall time get() spent materialising on the calling thread — the
         #: quantity prefetch removes from the critical path
         self.sync_materialize_time = 0.0
@@ -136,6 +156,48 @@ class BlockStore:
             else:
                 raise ValueError(f"unknown prefetch op {op[0]!r}; have full, partial")
 
+    # -- hot-set policy (serving layer) ----------------------------------------
+    def pin(self, blocks) -> None:
+        """Pin ``blocks`` into the hot set.  A pinned block is charged one
+        ``block_load`` on first touch, then held resident outside the LRU;
+        later charged :meth:`get`\\ s skip the charge and meter the saving
+        (``IOStats.pinned_block_hits`` / ``pinned_bytes_saved``).  Already
+        pinned ids (and their resident copies) are kept."""
+        with self._lock:
+            for b in blocks:
+                b = int(b)
+                if b not in self._pinned:
+                    # promote an LRU-resident copy instead of re-reading it
+                    self._pinned[b] = self._cache.pop(b, None)
+            self.stats.note_hot_set(len(self._pinned))
+
+    def unpin(self, blocks) -> None:
+        """Release ``blocks`` from the hot set; they rejoin the cold tail
+        (their resident copies re-enter the LRU and compete for capacity
+        again, and every later charged :meth:`get` pays ``block_load``)."""
+        with self._lock:
+            for b in blocks:
+                blk = self._pinned.pop(int(b), None)
+                if blk is not None:
+                    self._cache[int(b)] = blk
+                    self._cache.move_to_end(int(b))
+            while len(self._cache) > self.capacity:
+                self._cache.popitem(last=False)
+            self.stats.note_hot_set(len(self._pinned))
+
+    def set_pinned(self, blocks) -> None:
+        """Replace the hot set: pin the new ids, release the dropped ones.
+        The serving layer calls this at every admission batch with the
+        policy's current top-traffic blocks."""
+        want = {int(b) for b in blocks}
+        self.unpin([b for b in list(self._pinned) if b not in want])
+        self.pin(sorted(want))
+
+    def pinned(self) -> frozenset:
+        """The hot set's block ids."""
+        with self._lock:
+            return frozenset(self._pinned)
+
     def prefetch(self, b: int) -> None:
         """Start materialising block ``b`` in the background (no charge)."""
         if not self.enable_prefetch:
@@ -144,6 +206,8 @@ class BlockStore:
         with self._lock:
             if b in self._cache or b in self._futures:
                 return
+            if self._pinned.get(b) is not None:
+                return  # pinned resident: nothing to build
             self._futures[b] = self._submit(self._materialize, b)
             self.prefetch_issued += 1
 
@@ -171,12 +235,44 @@ class BlockStore:
 
         The charge models the paper's deterministic accounting (the page
         cache is bypassed), so cache/prefetch hits still pay the modelled
-        I/O — they only skip the host-side materialisation latency.
+        I/O — they only skip the host-side materialisation latency.  The
+        one exception is the **hot set**: a :meth:`pin`\\ ned block is
+        charged on first touch only; later charged gets are served from the
+        pinned copy with the avoided charge metered as a deterministic
+        saving (the serving layer's whole point).
         """
         b = int(b)
         with self._lock:
+            pinned = b in self._pinned
+            blk = self._pinned.get(b) if pinned else self._cache.get(b)
             fut = self._futures.pop(b, None)
-            blk = self._cache.get(b)
+        if pinned:
+            if blk is not None:
+                self.pinned_hits += 1
+                if charge:
+                    self.stats.note_pinned_hit(blk.nbytes_full())
+                return blk
+            # first touch: materialise (joining any in-flight prefetch),
+            # pay the normal block_load charge, and keep the copy pinned
+            if fut is not None:
+                t0 = time.perf_counter()
+                blk = fut.result()
+                self.prefetch_wait_time += time.perf_counter() - t0
+                self.prefetch_hits += 1
+                self.stats.note_overlapped(blk.nbytes_full())
+            else:
+                t0 = time.perf_counter()
+                blk = self._materialize(b)
+                self.sync_materialize_time += time.perf_counter() - t0
+                self.demand_loads += 1
+            with self._lock:
+                if b in self._pinned:
+                    self._pinned[b] = blk
+                else:  # unpinned while materialising: fall back to the LRU
+                    self._insert(b, blk)
+            if charge:
+                self.stats.block_load(b, blk.nbytes_full(), sequential=sequential)
+            return blk
         if fut is not None:
             t0 = time.perf_counter()
             blk = fut.result()
@@ -258,6 +354,8 @@ class BlockStore:
             "partial_prefetch_issued": self.partial_prefetch_issued,
             "partial_prefetch_hits": self.partial_prefetch_hits,
             "partial_builds": self.partial_builds,
+            "pinned_blocks": len(self._pinned),
+            "pinned_hits": self.pinned_hits,
             "sync_materialize_time": self.sync_materialize_time,
             "prefetch_wait_time": self.prefetch_wait_time,
         }
@@ -267,6 +365,7 @@ class BlockStore:
             futures = list(self._futures.values()) + list(self._pfutures.values())
             self._futures = {}
             self._pfutures = {}
+            self._pinned = OrderedDict()
             executor, self._executor = self._executor, None
         for fut in futures:
             fut.cancel()

@@ -1,0 +1,32 @@
+"""Query serving: point random-walk queries over the disk-based engine.
+
+The batch tiers answer the paper's offline workloads (RWNV/PRNV over every
+vertex, §7.1); this package is the online front end the ROADMAP's
+production-serving arc calls for.  It turns a stream of ``(source,
+config)`` point queries into admission batches
+(:mod:`~repro.serve.admission`) that ride the stock triangular bi-block
+sweep (§4.2) through the ``initial_walks`` /shared-``BlockStore`` seams of
+:class:`~repro.engines.base.EngineBase`, pins the query-traffic hot set of
+blocks in memory (:mod:`~repro.serve.policy`), and materializes per-query
+PPR / neighbor-multiset answers with submit→answer latency
+(:mod:`~repro.serve.query`, :mod:`~repro.serve.server`).
+
+Everything is deterministic: the counter-based RNG makes served walks bit
+identical to the equivalent direct batch run, and pinning changes only
+what is *charged*, never what executes — both properties are asserted by
+the ``query_serving`` bench.
+"""
+
+from .admission import AdmissionQueue
+from .policy import HotSetPolicy
+from .query import QueryAnswer, QueryConfig, WalkQuery
+from .server import WalkQueryServer
+
+__all__ = [
+    "AdmissionQueue",
+    "HotSetPolicy",
+    "QueryAnswer",
+    "QueryConfig",
+    "WalkQuery",
+    "WalkQueryServer",
+]

@@ -286,7 +286,7 @@ def test_writer_cleans_up_temp_on_failure(small_blocked, tmp_path, monkeypatch):
 
 def _strip_wall_clock(stats):
     # writer_queue_peak is enqueue-time queue depth — timing-dependent by
-    # design (docs/architecture.md: "don't pin it"), so it is stripped
+    # design (docs/execution.md: "don't pin it"), so it is stripped
     # alongside the wall-clock timers before the strict equality check
     d = stats.as_dict()
     for k in ("exec_time", "sim_wall_time", "writer_queue_peak"):

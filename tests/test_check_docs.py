@@ -1,0 +1,81 @@
+"""The docs contract: scripts/check_docs.py passes on the real tree and
+fails on each violation class it claims to catch (dangling link, missing
+referenced path, nonexistent repro.* module, missing attribute, unknown
+CLI flag)."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_docs  # noqa: E402
+
+
+def test_real_repo_is_clean(capsys):
+    assert check_docs.main([str(REPO)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+@pytest.fixture
+def tree(tmp_path):
+    """A minimal passing repo tree the violation tests then break."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro" / "serve").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "serve" / "__init__.py").write_text(
+        "class WalkQueryServer: pass\n"
+    )
+    (tmp_path / "src" / "repro" / "launch").mkdir()
+    (tmp_path / "src" / "repro" / "launch" / "serve.py").write_text(
+        'ap.add_argument("--max-batch")\n'
+    )
+    (tmp_path / "README.md").write_text(
+        "See [the docs](docs/index.md) and `docs/index.md`.\n"
+        "Use `repro.serve.WalkQueryServer` with `--max-batch`.\n"
+    )
+    (tmp_path / "docs" / "index.md").write_text("All good here.\n")
+    assert check_docs.main([str(tmp_path)]) == 0
+    return tmp_path
+
+
+def _errors(tree, capsys):
+    rc = check_docs.main([str(tree)])
+    return rc, capsys.readouterr().err
+
+
+def test_dangling_link_fails(tree, capsys):
+    (tree / "docs" / "index.md").write_text("[gone](missing.md)\n")
+    rc, err = _errors(tree, capsys)
+    assert rc == 1 and "dangling link" in err and "missing.md" in err
+
+
+def test_missing_backtick_path_fails(tree, capsys):
+    (tree / "docs" / "index.md").write_text("see `scripts/not_there.py`\n")
+    rc, err = _errors(tree, capsys)
+    assert rc == 1 and "not_there.py" in err
+
+
+def test_nonexistent_module_fails(tree, capsys):
+    (tree / "docs" / "index.md").write_text("uses `repro.nonexistent.thing`\n")
+    rc, err = _errors(tree, capsys)
+    assert rc == 1 and "repro.nonexistent.thing" in err
+
+
+def test_missing_attribute_fails(tree, capsys):
+    (tree / "docs" / "index.md").write_text("uses `repro.serve.NoSuchClass`\n")
+    rc, err = _errors(tree, capsys)
+    assert rc == 1 and "NoSuchClass" in err
+
+
+def test_unknown_flag_fails(tree, capsys):
+    (tree / "docs" / "index.md").write_text("pass `--definitely-not-a-flag`\n")
+    rc, err = _errors(tree, capsys)
+    assert rc == 1 and "--definitely-not-a-flag" in err
+
+
+def test_external_tool_flags_are_allowed(tree, capsys):
+    (tree / "docs" / "index.md").write_text("run `ruff format --check .`\n")
+    rc, _ = _errors(tree, capsys)
+    assert rc == 0

@@ -59,6 +59,9 @@ def test_lint_job_runs_ruff_check_and_format(wf):
     runs = _runs(wf["jobs"]["lint"])
     assert any(r.strip().startswith("ruff check") for r in runs)
     assert any("ruff format --check" in r for r in runs)
+    # the docs contract rides the lint job: links resolve, named repro.*
+    # module paths and CLI flags exist (stdlib-only, runs without deps)
+    assert any("scripts/check_docs.py" in r for r in runs)
     # and the matching config exists in pyproject
     py = (REPO / "pyproject.toml").read_text()
     assert "[tool.ruff]" in py and "[tool.ruff.lint]" in py
@@ -77,6 +80,9 @@ def test_bench_smoke_runs_matrix_and_uploads_artifact(wf):
     # ... and the fused-advance entry (pallas vs jax advance: identical walk
     # CRCs and charges, us_per_call for both impls in the report)
     assert any("fused_advance" in r and "--json" in r for r in runs)
+    # ... and the query-serving entry (served answers bit-identical to
+    # direct batch runs; hot-set pinning strictly cheaper than pure LRU)
+    assert any("query_serving" in r and "--json" in r for r in runs)
     assert any("--pool disk" in r and "--graph-backend disk" in r for r in runs)
     uploads = [s for s in job["steps"] if "upload-artifact" in str(s.get("uses", ""))]
     assert len(uploads) == 1

@@ -1,0 +1,55 @@
+"""Every examples/*.py entry point runs end to end on a tiny configuration.
+
+Each example exposes size arguments exactly so this smoke can exist: the
+full code path (graph build -> engine/serving -> readout, or model init ->
+train/decode) executes in seconds, and a refactor that breaks an example's
+imports or argument surface fails here instead of on a reader's machine.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+EXAMPLES = REPO / "examples"
+
+TINY_ARGS = {
+    "quickstart.py": ["--vertices", "300", "--blocks", "4", "--length", "8"],
+    "pagerank_query.py": [
+        "--vertices", "300", "--blocks", "4", "--samples", "16", "--length", "6",
+    ],
+    "train_lm_on_walks.py": [
+        "--tiny", "--steps", "3", "--vertices", "200", "--batch", "2", "--seq", "8",
+    ],
+    "serve_lm.py": ["--batch", "1", "--prompt-len", "4", "--new-tokens", "2"],
+}
+
+
+def test_every_example_has_tiny_args():
+    scripts = sorted(p.name for p in EXAMPLES.glob("*.py"))
+    assert scripts == sorted(TINY_ARGS), (
+        f"examples/ and the smoke matrix diverged: {scripts} vs {sorted(TINY_ARGS)}"
+    )
+
+
+@pytest.mark.parametrize("script", sorted(TINY_ARGS))
+def test_example_runs(script, tmp_path):
+    args = list(TINY_ARGS[script])
+    if script == "train_lm_on_walks.py":
+        args += ["--ckpt-dir", str(tmp_path / "ckpt")]
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"), JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, str(EXAMPLES / script), *args],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=env,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, (
+        f"{script} failed\nstdout:\n{proc.stdout[-2000:]}\nstderr:\n{proc.stderr[-2000:]}"
+    )
+    assert proc.stdout.strip(), f"{script} printed nothing"

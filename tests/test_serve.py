@@ -1,0 +1,193 @@
+"""The serving front end: admission batching, hot-set pinning, and the
+CRC-identity contract with direct batch runs (docs/serving.md)."""
+
+import numpy as np
+import pytest
+
+from repro.core import barabasi_albert, partition_into_n_blocks
+from repro.core.stats import IOStats
+from repro.engines.biblock import BiBlockEngine
+from repro.io import BlockStore
+from repro.serve import (
+    AdmissionQueue,
+    HotSetPolicy,
+    QueryConfig,
+    WalkQuery,
+    WalkQueryServer,
+)
+
+CFG = QueryConfig(p=1.0, q=2.0, length=6, decay=0.85, samples=8)
+
+
+@pytest.fixture(scope="module")
+def bg():
+    return partition_into_n_blocks(barabasi_albert(400, 5, seed=3), 5)
+
+
+def _skewed_sources(bg, n, frac=0.8, seed=7):
+    rng = np.random.default_rng(seed)
+    hi = int(bg.block_starts[1])
+    return np.where(
+        rng.random(n) < frac,
+        rng.integers(0, hi, n),
+        rng.integers(0, bg.num_vertices, n),
+    ).astype(np.int64)
+
+
+def _serve(bg, sources, cfg=CFG, **kw):
+    kw.setdefault("async_pipeline", False)
+    server = WalkQueryServer(bg, seed=11, **kw)
+    with server:
+        for s in sources:
+            server.submit(int(s), cfg)
+        return server, server.flush()
+
+
+# -- the CRC-identity contract -------------------------------------------------
+def test_served_batches_match_direct_runs(bg):
+    sources = _skewed_sources(bg, 12)
+    server, answers = _serve(bg, sources, max_batch=8)
+    assert server.batches_served == 2
+    for k, lo in enumerate((0, 8)):
+        batch = answers[lo : lo + 8]
+        served = np.zeros(bg.num_vertices, np.int64)
+        for a in batch:
+            served += a.dense_counts(bg.num_vertices)
+        direct = BiBlockEngine(
+            bg,
+            CFG.task(server.batch_seed(k)),
+            initial_walks=np.repeat([a.source for a in batch], CFG.samples),
+            async_pipeline=False,
+        ).run()
+        assert np.array_equal(served, direct.endpoint_counts)
+
+
+def test_pinning_never_changes_answers_and_saves_block_loads(bg):
+    sources = _skewed_sources(bg, 24)
+    hot, hot_ans = _serve(bg, sources, max_batch=8, hot_blocks=2)
+    lru, lru_ans = _serve(bg, sources, max_batch=8, hot_blocks=0)
+    for a, b in zip(hot_ans, lru_ans):
+        assert np.array_equal(a.vertices, b.vertices)
+        assert np.array_equal(a.counts, b.counts)
+    assert hot.stats.pinned_block_hits > 0
+    assert hot.stats.pinned_bytes_saved > 0
+    assert hot.stats.block_ios < lru.stats.block_ios
+    assert lru.stats.pinned_block_hits == 0
+
+
+def test_per_query_attribution_and_latency(bg):
+    sources = _skewed_sources(bg, 6)
+    server, answers = _serve(bg, sources)
+    assert [a.qid for a in answers] == list(range(6))
+    for a, s in zip(answers, sources):
+        assert a.source == int(s)
+        assert int(a.counts.sum()) == CFG.samples  # every walk terminated once
+        assert a.latency > 0.0
+        verts, probs = a.ppr()
+        assert np.isclose(probs.sum(), 1.0) and np.all(verts[:-1] < verts[1:])
+    summary = server.latency_summary()
+    assert summary["answered"] == 6
+    assert summary["p50"] <= summary["p95"] <= summary["p99"]
+    assert server.answer(0) is answers[0] and server.answer(99) is None
+
+
+# -- admission batching --------------------------------------------------------
+def test_admission_groups_by_config_oldest_head_first():
+    q = AdmissionQueue(max_batch=2)
+    cfg_a, cfg_b = QueryConfig(q=2.0), QueryConfig(q=4.0)
+    for qid, cfg in enumerate([cfg_b, cfg_a, cfg_b, cfg_a, cfg_b]):
+        q.submit(WalkQuery(qid, source=qid, config=cfg, t_submit=0.0))
+    assert len(q) == 5
+    # oldest pending head is qid 0 (cfg_b); FIFO within the group
+    cfg, batch = q.pop_batch()
+    assert cfg == cfg_b and [w.qid for w in batch] == [0, 2]
+    cfg, batch = q.pop_batch()
+    assert cfg == cfg_a and [w.qid for w in batch] == [1, 3]
+    cfg, batch = q.pop_batch()
+    assert cfg == cfg_b and [w.qid for w in batch] == [4]
+    assert q.pop_batch() is None and len(q) == 0
+
+
+def test_admission_rejects_bad_max_batch():
+    with pytest.raises(ValueError):
+        AdmissionQueue(max_batch=0)
+
+
+# -- the hot-set policy --------------------------------------------------------
+def test_hot_set_policy_top_blocks_ties_and_thresholds():
+    p = HotSetPolicy(6, max_pinned=2, min_arrivals=2)
+    assert p.hot_set().size == 0  # nothing qualifies yet
+    for b, n in ((4, 3), (1, 3), (2, 1)):
+        p.observe(b, n)
+    # 1 and 4 tie the lead -> both in; 2 is below min_arrivals
+    assert p.hot_set().tolist() == [1, 4]
+    p.observe(2, 5)
+    assert p.hot_set().tolist() == [1, 2] or p.hot_set().tolist() == [2, 1]
+    assert HotSetPolicy(6, max_pinned=0).hot_set().size == 0
+    with pytest.raises(ValueError):
+        HotSetPolicy(6, max_pinned=-1)
+
+
+# -- BlockStore pinning units --------------------------------------------------
+def test_pinned_block_charges_once_then_serves_free(bg):
+    stats = IOStats()
+    store = BlockStore(bg, stats, enable_prefetch=False, capacity=2)
+    store.pin([0])
+    assert store.pinned() == frozenset({0})
+    assert stats.hot_pinned_blocks == 1
+    store.get(0)  # first touch: one normal charge
+    assert stats.block_ios == 1 and stats.pinned_block_hits == 0
+    store.get(0)
+    store.get(0)
+    assert stats.block_ios == 1  # no further block_load charges
+    assert stats.pinned_block_hits == 2 and stats.pinned_bytes_saved > 0
+    store.close()
+
+
+def test_pinned_blocks_are_exempt_from_lru_eviction(bg):
+    stats = IOStats()
+    store = BlockStore(bg, stats, enable_prefetch=False, capacity=2)
+    store.pin([0])
+    store.get(0)
+    for b in (1, 2, 3, 4):  # churn far past the LRU capacity
+        store.get(b)
+    ios = stats.block_ios
+    store.get(0)  # still resident: pinned, never evicted
+    assert stats.block_ios == ios
+    store.unpin([0])
+    assert store.pinned() == frozenset()
+    for b in (1, 2, 3, 4):
+        store.get(b)
+    store.get(0)  # unpinned copy has aged out of the small LRU by now
+    assert stats.block_ios > ios
+    store.close()
+
+
+def test_set_pinned_reconciles_and_promotes_resident_copies(bg):
+    stats = IOStats()
+    store = BlockStore(bg, stats, enable_prefetch=False, capacity=2)
+    store.get(1)  # LRU-resident; pinning must promote, not re-load
+    store.set_pinned([1, 2])
+    assert store.pinned() == frozenset({1, 2})
+    ios = stats.block_ios
+    store.get(1)
+    assert stats.block_ios == ios and stats.pinned_block_hits == 1
+    store.set_pinned([2])
+    assert store.pinned() == frozenset({2})
+    assert stats.hot_pinned_blocks == 1
+    assert store.counters()["pinned_blocks"] == 1
+    store.close()
+
+
+def test_shared_store_requires_matching_stats(bg):
+    stats = IOStats()
+    store = BlockStore(bg, stats, enable_prefetch=False, capacity=2)
+    with pytest.raises(ValueError):
+        BiBlockEngine(bg, CFG.task(0), block_store=store, stats=IOStats())
+    store.close()
+
+
+def test_submit_rejects_out_of_range_source(bg):
+    with WalkQueryServer(bg, async_pipeline=False) as server:
+        with pytest.raises(ValueError):
+            server.submit(bg.num_vertices)
