@@ -340,6 +340,12 @@ class BlockedGraph:
         self.max_block_edges = max(int(nedges.max()), 1)
         self._build_alias = build_alias
         self._blocks: dict[int, ResidentBlock] = {}
+        # Waste budget (bytes) of the gap-aware on-demand read planner
+        # (repro.io.ioplan).  The RAM backend performs no real reads, but the
+        # BlockStore meters the planner's modelled gauges off this knob so
+        # accounting is backend-invariant.  0 = planner off (per-vertex
+        # reference reads).
+        self.io_coalesce_gap = 0
 
     # -- backend-neutral surface (shared with repro.io.DiskBlockedGraph) ------
     # Engines and the BlockStore only touch this surface plus
@@ -364,6 +370,13 @@ class BlockedGraph:
     def ensure_alias(self) -> None:
         """Ask for alias tables on every materialised block from now on."""
         self._build_alias = True
+
+    def row_extents(self, vertices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Global CSR edge range ``[rs, re)`` per vertex of a sorted unique
+        ``vertices`` array — resident metadata only, no I/O.  The read
+        planner's input on either backend."""
+        vs = np.asarray(vertices, dtype=np.int64)
+        return self.graph.indptr[vs], self.graph.indptr[vs + 1]
 
     # -- paper Table 2 style metadata ---------------------------------------
     def edge_cut(self) -> float:

@@ -87,6 +87,30 @@ class BlockLoadingModel:
         self._gfull = LinearCostModel(with_intercept=True)
         self._gond = LinearCostModel(with_intercept=False)
 
+    # -- cost model ----------------------------------------------------------
+    @staticmethod
+    def ondemand_cost(
+        preset,
+        n_vertices: int,
+        nbytes: int,
+        *,
+        seeks: int | None = None,
+        waste_bytes: int = 0,
+    ) -> float:
+        """Modelled on-demand cost with the per-seek term.
+
+        The reference path pays one random I/O per activated vertex
+        (``seeks=None`` — exactly ``preset.rand_cost``).  With the gap-aware
+        read planner on, cost is a function of the *coalesced ranges* the
+        plan actually issued, not the raw vertex count: one seek per range
+        plus streaming over useful + read-through waste bytes.  Feeding this
+        to :meth:`observe` makes the learned full-vs-on-demand threshold
+        η₀ reflect coalesced reality.
+        """
+        if seeks is None:
+            return preset.rand_cost(n_vertices, nbytes)
+        return seeks * preset.rand_latency + (nbytes + waste_bytes) / preset.rand_bandwidth
+
     # -- sample collection ---------------------------------------------------
     def observe(self, block_id: int, eta: float, cost: float, method: LoadDecision) -> None:
         if method == "full":

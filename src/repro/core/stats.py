@@ -62,6 +62,9 @@ class IOStats:
         self.walk_bytes_read = 0
         self.ondemand_ios = 0
         self.ondemand_bytes = 0
+        self.ondemand_syscalls = 0
+        self.coalesced_ranges = 0
+        self.coalesce_waste_bytes = 0
         self.hot_pinned_blocks = 0
         self.pinned_block_hits = 0
         self.pinned_bytes_saved = 0
@@ -97,10 +100,45 @@ class IOStats:
         self.vertex_bytes += nbytes
         self.sim_vertex_io_time += self.preset.rand_cost(n_vertices, nbytes)
 
-    def ondemand_load(self, n_vertices: int, nbytes: int) -> None:
+    def ondemand_load(
+        self,
+        n_vertices: int,
+        nbytes: int,
+        *,
+        seeks: int | None = None,
+        waste_bytes: int = 0,
+    ) -> None:
+        """Charge an on-demand gather: ``n_vertices`` vertex I/Os moving
+        ``nbytes`` *useful* bytes.  With the gap-aware read planner on, the
+        caller passes the observed ``seeks`` (coalesced ranges actually
+        issued) and read-through ``waste_bytes``, and the modelled time pays
+        one seek per range plus streaming over useful+wasted bytes — the
+        loader's per-seek cost term.  ``seeks=None`` (planner off) keeps the
+        bit-exact reference charge of one random I/O per vertex.  The
+        ``ondemand_ios``/``ondemand_bytes`` counters always count vertices
+        and useful bytes, so charged useful bytes never depend on the gap."""
         self.ondemand_ios += n_vertices
         self.ondemand_bytes += nbytes
-        self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
+        if seeks is None:
+            self.sim_ondemand_io_time += self.preset.rand_cost(n_vertices, nbytes)
+        else:
+            p = self.preset
+            self.sim_ondemand_io_time += seeks * p.rand_latency + (
+                nbytes + waste_bytes
+            ) / p.rand_bandwidth
+
+    def note_ondemand_plan(self, syscalls: int, ranges: int, waste_bytes: int) -> None:
+        """Gauges: what the on-demand read planner actually did.
+        ``ondemand_syscalls`` counts every ``pread`` the on-demand path
+        issues (4 tiny ones per vertex on the reference path, one large one
+        per coalesced range with the planner on); ``coalesced_ranges``
+        counts only planner-issued ranges; ``coalesce_waste_bytes`` is the
+        read-through hole bytes those ranges carried beyond the useful
+        extents.  Metered from the pure plan model on either graph backend,
+        so the values are deterministic and backend-invariant."""
+        self.ondemand_syscalls += int(syscalls)
+        self.coalesced_ranges += int(ranges)
+        self.coalesce_waste_bytes += int(waste_bytes)
 
     def note_hot_set(self, n_blocks: int) -> None:
         """Gauge: blocks currently pinned resident by the
@@ -214,6 +252,9 @@ class IOStats:
             "vertex_bytes": self.vertex_bytes,
             "ondemand_ios": self.ondemand_ios,
             "ondemand_bytes": self.ondemand_bytes,
+            "ondemand_syscalls": self.ondemand_syscalls,
+            "coalesced_ranges": self.coalesced_ranges,
+            "coalesce_waste_bytes": self.coalesce_waste_bytes,
             "hot_pinned_blocks": self.hot_pinned_blocks,
             "pinned_block_hits": self.pinned_block_hits,
             "pinned_bytes_saved": self.pinned_bytes_saved,

@@ -82,34 +82,42 @@ class WalkTask:
         if self.query_vertex is not None:
             n = self.total_walks if self.total_walks is not None else 4 * num_vertices
             return np.full(n, self.query_vertex, dtype=np.int64)
-        return np.repeat(
-            np.arange(num_vertices, dtype=np.int64), self.walks_per_vertex
-        )
+        return np.repeat(np.arange(num_vertices, dtype=np.int64), self.walks_per_vertex)
 
     @property
     def uses_restart(self) -> bool:
         return self.decay < 1.0
 
 
-def rwnv_task(p: float = 1.0, q: float = 1.0, *, walks_per_vertex: int = 10,
-              length: int = 80, seed: int = 0) -> WalkTask:
+def rwnv_task(
+    p: float = 1.0, q: float = 1.0, *, walks_per_vertex: int = 10, length: int = 80, seed: int = 0
+) -> WalkTask:
     """Random Walk generation with the Node2vec model (benchmark 1, §7.1)."""
-    return WalkTask(Node2vec(p=p, q=q), length=length,
-                    walks_per_vertex=walks_per_vertex, seed=seed)
+    return WalkTask(Node2vec(p=p, q=q), length=length, walks_per_vertex=walks_per_vertex, seed=seed)
 
 
-def prnv_task(query_vertex: int, num_vertices: int, *, p: float = 1.0,
-              q: float = 1.0, decay: float = 0.85, length: int = 20,
-              samples_per_vertex: int = 4, seed: int = 0) -> WalkTask:
+def prnv_task(
+    query_vertex: int,
+    num_vertices: int,
+    *,
+    p: float = 1.0,
+    q: float = 1.0,
+    decay: float = 0.85,
+    length: int = 20,
+    samples_per_vertex: int = 4,
+    seed: int = 0,
+) -> WalkTask:
     """PageRank Query with the Node2vec model (benchmark 2, §7.1)."""
     return WalkTask(
-        Node2vec(p=p, q=q), length=length, query_vertex=query_vertex,
-        total_walks=samples_per_vertex * num_vertices, decay=decay, seed=seed,
+        Node2vec(p=p, q=q),
+        length=length,
+        query_vertex=query_vertex,
+        total_walks=samples_per_vertex * num_vertices,
+        decay=decay,
+        seed=seed,
     )
 
 
-def deepwalk_task(*, walks_per_vertex: int = 10, length: int = 80,
-                  seed: int = 0) -> WalkTask:
+def deepwalk_task(*, walks_per_vertex: int = 10, length: int = 80, seed: int = 0) -> WalkTask:
     """First-order DeepWalk task (paper §7.8)."""
-    return WalkTask(DeepWalk(), length=length,
-                    walks_per_vertex=walks_per_vertex, seed=seed)
+    return WalkTask(DeepWalk(), length=length, walks_per_vertex=walks_per_vertex, seed=seed)

@@ -110,11 +110,20 @@ class BiBlockEngine(EngineBase):
             cost = self.stats.preset.seq_cost(nbytes)
             view = self.blocks.get_view(i, sequential=True)
         else:
+            gap = int(getattr(self.bg, "io_coalesce_gap", 0))
+            sys0 = self.stats.ondemand_syscalls
+            waste0 = self.stats.coalesce_waste_bytes
             view = self.blocks.partial_view(i, activated)
             nbytes = self.bg.activated_load_bytes(activated)
             n_act = view.nverts
-            cost = self.stats.preset.rand_cost(n_act, nbytes)
-            self.stats.ondemand_load(n_act, nbytes)
+            # with the planner on, cost follows the coalesced ranges the
+            # store just gauged, not the raw vertex count (per-seek term)
+            seeks = self.stats.ondemand_syscalls - sys0 if gap > 0 else None
+            waste = self.stats.coalesce_waste_bytes - waste0 if gap > 0 else 0
+            cost = self.loader.ondemand_cost(
+                self.stats.preset, n_act, nbytes, seeks=seeks, waste_bytes=waste
+            )
+            self.stats.ondemand_load(n_act, nbytes, seeks=seeks, waste_bytes=waste)
         return decision, eta, cost, view
 
     def _schedule_bucket_view(self, i: int, bucket: WalkBatch) -> None:
@@ -158,12 +167,19 @@ class BiBlockEngine(EngineBase):
             if ext.size == 0:
                 break
             nbytes = self.bg.activated_load_bytes(ext)
-            self.stats.ondemand_load(ext.size, nbytes)
-            cost += self.stats.preset.rand_cost(ext.size, nbytes)
+            gap = int(getattr(self.bg, "io_coalesce_gap", 0))
+            sys0 = self.stats.ondemand_syscalls
+            waste0 = self.stats.coalesce_waste_bytes
             # first-order buckets alias the same view in both slots — keep
             # the pair deduped so the extended rows are stored once
             both = self.pair.views[0] is self.pair.views[1]
             view = self.blocks.extend_view(view, ext)
+            seeks = self.stats.ondemand_syscalls - sys0 if gap > 0 else None
+            waste = self.stats.coalesce_waste_bytes - waste0 if gap > 0 else 0
+            self.stats.ondemand_load(ext.size, nbytes, seeks=seeks, waste_bytes=waste)
+            cost += self.loader.ondemand_cost(
+                self.stats.preset, ext.size, nbytes, seeks=seeks, waste_bytes=waste
+            )
             if both:
                 self.pair.set_slot(0, view)
             self.pair.set_slot(1, view)

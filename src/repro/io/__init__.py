@@ -19,6 +19,7 @@ from .blockfile import (
     write_block_file,
 )
 from .blockstore import BlockStore
+from .ioplan import ReadPlan, execute_plan, model_ondemand_io, plan_reads
 from .walkpool import (
     AsyncWalkPool,
     DiskWalkPool,
@@ -37,9 +38,13 @@ __all__ = [
     "DiskBlockedGraph",
     "DiskWalkPool",
     "MemoryWalkPool",
+    "ReadPlan",
     "ShardedWalkPool",
     "WalkPool",
+    "execute_plan",
     "make_walk_pool",
+    "model_ondemand_io",
+    "plan_reads",
     "shard_of_block",
     "write_and_open",
     "write_block_file",

@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core.graph import BlockView, ResidentBlock
 from repro.core.stats import IOStats
+from repro.io.ioplan import model_ondemand_io
 
 __all__ = ["BlockStore"]
 
@@ -122,6 +123,20 @@ class BlockStore:
         with self._mat_lock:
             return self.bg.partial_view(b, vertices)
 
+    def _note_ondemand_plan(self, vertices: np.ndarray) -> None:
+        """Meter the read planner's gauges for an on-demand request over
+        ``vertices`` — the *modelled* syscall/range/waste counts from
+        :func:`repro.io.ioplan.model_ondemand_io`, charged in program order
+        on the engine thread.  Like every deterministic charge, the gauge
+        covers the full requested set whether or not a prefetched base
+        served part of it, so the values are identical across prefetch /
+        async / backend configurations (and equal the real
+        ``DiskBlockedGraph`` counters when prefetch is off)."""
+        gap = int(getattr(self.bg, "io_coalesce_gap", 0))
+        syscalls, ranges, waste = model_ondemand_io(self.bg, vertices, gap)
+        if syscalls or ranges or waste:
+            self.stats.note_ondemand_plan(syscalls, ranges, waste)
+
     def _insert(self, b: int, blk: ResidentBlock) -> None:
         with self._lock:
             self._cache[b] = blk
@@ -146,15 +161,24 @@ class BlockStore:
         .BucketPipeline` derives them from the
         :class:`~repro.core.scheduler.TimeSlotPlan` (next slot's current
         block, next bucket's ancillary view) instead of issuing one-off
-        calls.  Never charges; a no-op when prefetch is disabled.
+        calls.  Same-slot partial requests against one block are batched:
+        their vertex sets union into a single prefetched build, so the read
+        planner sees one plan per block instead of one per request.  Never
+        charges; a no-op when prefetch is disabled.
         """
+        partials: Dict[int, list] = {}
         for op in ops:
             if op[0] == "full":
                 self.prefetch(op[1])
             elif op[0] == "partial":
-                self.prefetch_partial(op[1], op[2])
+                partials.setdefault(int(op[1]), []).append(
+                    np.asarray(op[2], dtype=np.int64)
+                )
             else:
                 raise ValueError(f"unknown prefetch op {op[0]!r}; have full, partial")
+        for b, sets in partials.items():
+            vs = sets[0] if len(sets) == 1 else np.unique(np.concatenate(sets))
+            self.prefetch_partial(b, vs)
 
     # -- hot-set policy (serving layer) ----------------------------------------
     def pin(self, blocks) -> None:
@@ -310,6 +334,8 @@ class BlockStore:
         """
         b = int(b)
         vs = np.unique(np.asarray(vertices, dtype=np.int64))
+        # gauge the plan over the full requested set (prefetch-invariant)
+        self._note_ondemand_plan(vs)
         base = None
         with self._lock:
             fut = self._pfutures.pop(b, None)
@@ -324,7 +350,7 @@ class BlockStore:
                 self.stats.note_overlapped(self.bg.activated_load_bytes(base.vids))
                 missing = vs[~base.has_vertices(vs)]
                 if missing.size:
-                    base = self.extend_view(base, missing)
+                    base = self._extend(base, missing)
                 return base
         t0 = time.perf_counter()
         view = self._build_partial(b, vs)
@@ -332,16 +358,23 @@ class BlockStore:
         self.partial_builds += 1
         return view
 
-    def extend_view(self, view: BlockView, vertices: np.ndarray) -> BlockView:
-        """Mid-advance extension gather: append the rows of ``vertices`` to
-        an activated ``view`` (never charges; the engine accounts the
-        gather as on-demand vertex I/O)."""
+    def _extend(self, view: BlockView, vertices: np.ndarray) -> BlockView:
         extra = self._build_partial(view.block_id, vertices)
         return view.extended(extra)
 
+    def extend_view(self, view: BlockView, vertices: np.ndarray) -> BlockView:
+        """Mid-advance extension gather: append the rows of ``vertices`` to
+        an activated ``view`` (never charges bytes; the engine accounts the
+        gather as on-demand vertex I/O).  Meters the read-planner gauges
+        for the gathered set."""
+        self._note_ondemand_plan(np.asarray(vertices, dtype=np.int64))
+        return self._extend(view, vertices)
+
     def gather_view(self, vertices: np.ndarray) -> BlockView:
         """Cross-block activated view over arbitrary vertices (never
-        charges; the engine accounts the per-vertex fetches)."""
+        charges bytes; the engine accounts the per-vertex fetches).  Meters
+        the read-planner gauges for the gathered set."""
+        self._note_ondemand_plan(np.asarray(vertices, dtype=np.int64))
         with self._mat_lock:
             return self.bg.gather_view(vertices)
 

@@ -91,6 +91,13 @@ def main():
         default=None,
         help="directory for the packed block file (disk backend)",
     )
+    ap.add_argument(
+        "--io-coalesce-gap",
+        type=int,
+        default=0,
+        help="waste budget (bytes) of the gap-aware on-demand read planner "
+        "(repro.io.ioplan); 0 = planner off, per-vertex reference reads",
+    )
     args = ap.parse_args()
 
     from repro.core import barabasi_albert, partition_into_n_blocks
@@ -101,7 +108,9 @@ def main():
     if args.graph_backend == "disk":
         from repro.io import write_and_open
 
-        bg = write_and_open(bg, args.graph_dir)
+        bg = write_and_open(bg, args.graph_dir, io_coalesce_gap=args.io_coalesce_gap)
+    else:
+        bg.io_coalesce_gap = args.io_coalesce_gap
 
     config = QueryConfig(
         p=args.p, q=args.q, length=args.length, decay=args.decay, samples=args.samples
@@ -131,13 +140,15 @@ def main():
         s = server.stats
         print(
             "queries,batches,p50_ms,p95_ms,p99_ms,block_ios,pinned_blocks,"
-            "pinned_hits,pinned_bytes_saved"
+            "pinned_hits,pinned_bytes_saved,ondemand_syscalls,"
+            "coalesced_ranges,coalesce_waste_bytes"
         )
         print(
             f"{len(answers)},{server.batches_served},"
             f"{lat['p50'] * 1e3:.2f},{lat['p95'] * 1e3:.2f},{lat['p99'] * 1e3:.2f},"
             f"{s.block_ios},{s.hot_pinned_blocks},{s.pinned_block_hits},"
-            f"{s.pinned_bytes_saved}"
+            f"{s.pinned_bytes_saved},{s.ondemand_syscalls},"
+            f"{s.coalesced_ranges},{s.coalesce_waste_bytes}"
         )
 
 

@@ -95,6 +95,14 @@ def main():
         help="directory for the packed block file "
         "(disk backend; default: a fresh temp dir)",
     )
+    ap.add_argument(
+        "--io-coalesce-gap",
+        type=int,
+        default=0,
+        help="waste budget (bytes) of the gap-aware on-demand read planner "
+        "(repro.io.ioplan): holes up to this size are read through instead "
+        "of seeked over; 0 = planner off, per-vertex reference reads",
+    )
     args = ap.parse_args()
 
     from repro.core import (
@@ -116,9 +124,10 @@ def main():
 
         # default scratch dir is removed at exit; an explicit --graph-dir
         # persists so the container can be reused across runs
-        bg = write_and_open(bg_ram, args.graph_dir)
+        bg = write_and_open(bg_ram, args.graph_dir, io_coalesce_gap=args.io_coalesce_gap)
     else:
         bg = bg_ram
+        bg.io_coalesce_gap = args.io_coalesce_gap
     if args.task == "rwnv":
         task = rwnv_task(
             p=args.p,
@@ -149,7 +158,8 @@ def main():
     )
     engines = args.engine or ["biblock", "sogw"]
     print(
-        "engine,block_ios,vertex_ios,ondemand_ios,walk_bytes_written,"
+        "engine,block_ios,vertex_ios,ondemand_ios,ondemand_syscalls,"
+        "coalesced_ranges,coalesce_waste_bytes,walk_bytes_written,"
         "peak_resident_bytes,prefetch_hits,overlapped_load_bytes,"
         "pipeline_stall_slots,writer_queue_peak,sim_io_s,exec_s,sim_wall_s"
     )
@@ -169,6 +179,7 @@ def main():
         hits = (res.block_store_counters or {}).get("prefetch_hits", 0)
         print(
             f"{name},{s.block_ios},{s.vertex_ios},{s.ondemand_ios},"
+            f"{s.ondemand_syscalls},{s.coalesced_ranges},{s.coalesce_waste_bytes},"
             f"{s.walk_bytes_written},{s.peak_resident_bytes},{hits},"
             f"{s.overlapped_load_bytes},{s.pipeline_stall_slots},"
             f"{s.writer_queue_peak},"

@@ -9,6 +9,7 @@ RAM and disk graph backends, for both full-load and on-demand loading.
 """
 
 import os
+import tempfile
 
 import numpy as np
 import pytest
@@ -18,6 +19,7 @@ from repro.core import (
     CSRGraph,
     PlainBucketEngine,
     SOGWEngine,
+    erdos_renyi,
     partition_into_n_blocks,
     rwnv_task,
 )
@@ -26,9 +28,12 @@ from repro.io import (
     BlockFileError,
     BlockStore,
     DiskBlockedGraph,
+    model_ondemand_io,
+    plan_reads,
     write_and_open,
     write_block_file,
 )
+from repro.testing import given, settings, st
 
 
 @pytest.fixture(scope="module")
@@ -325,6 +330,164 @@ def test_weighted_biblock_bit_identical(weighted_blocked, tmp_path):
     with DiskBlockedGraph(path) as dg:
         r_dsk = BiBlockEngine(dg, task).run()
     np.testing.assert_array_equal(r_ram.endpoint_counts, r_dsk.endpoint_counts)
+
+
+# ---------------------------------------------------------------------------
+# gap-aware read planner (repro.io.ioplan)
+# ---------------------------------------------------------------------------
+
+def test_empty_ondemand_read_not_counted(disk_graph):
+    """Regression: a zero-vertex request issues no pread and counts nothing."""
+    with DiskBlockedGraph(disk_graph) as dg:
+        assert dg.read_rows(1, []) == {}
+        assert dg.ondemand_reads == 0
+        assert dg.ondemand_syscalls == 0
+        assert dg.ondemand_bytes_read == 0
+        view = dg.partial_view(1, [])
+        assert view.nverts == 0
+        assert dg.ondemand_reads == 0
+        # a non-empty request still counts exactly one on-demand read
+        dg.read_rows(1, [int(dg.block_starts[1])])
+        assert dg.ondemand_reads == 1
+
+
+@given(
+    gap=st.sampled_from([0, 1, 64, 4096, 1 << 20]),
+    seed=st.integers(0, 10_000),
+    weighted=st.booleans(),
+)
+@settings(max_examples=20, deadline=None)
+def test_planner_matches_per_vertex_reference(gap, seed, weighted):
+    """Satellite property: for random graphs and random gap budgets the
+    planner returns the same rows/alias segments and charges the same
+    useful bytes as the per-vertex reference, with no more syscalls — and
+    zero coalescing at ``gap_bytes=0``."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(20, 120))
+    g = erdos_renyi(n, int(rng.integers(n, 6 * n)), seed=seed)
+    if weighted:
+        g = CSRGraph(
+            g.indptr, g.indices,
+            rng.uniform(0.5, 2.0, g.num_edges).astype(np.float32),
+        )
+    bg = partition_into_n_blocks(g, int(rng.integers(2, 6)))
+    if weighted:
+        bg.ensure_alias()
+    verts = rng.integers(0, n, size=int(rng.integers(1, 3 * n)))
+    # tempfile instead of a pytest fixture: @given bodies cannot take
+    # function-scoped fixtures (hypothesis health check / fallback shim)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, BLOCK_FILE_NAME)
+        write_block_file(bg, path)
+        _check_planner_vs_reference(path, verts, gap, weighted)
+
+
+def _check_planner_vs_reference(path, verts, gap, weighted):
+    with DiskBlockedGraph(path) as ref, DiskBlockedGraph(path, io_coalesce_gap=gap) as pln:
+        v_ref = ref.gather_view(verts)
+        v_pln = pln.gather_view(verts)
+        np.testing.assert_array_equal(v_pln.vids, v_ref.vids)
+        np.testing.assert_array_equal(v_pln.indptr, v_ref.indptr)
+        np.testing.assert_array_equal(v_pln.indices, v_ref.indices)
+        if weighted:
+            np.testing.assert_array_equal(v_pln.alias_j, v_ref.alias_j)
+            np.testing.assert_array_equal(v_pln.alias_q, v_ref.alias_q)
+        assert pln.ondemand_bytes_read == ref.ondemand_bytes_read
+        assert pln.ondemand_bytes_read == ref.activated_load_bytes(verts)
+        assert pln.aux_bytes_read == ref.aux_bytes_read
+        assert pln.ondemand_syscalls <= ref.ondemand_syscalls
+        if gap == 0:
+            # planner off: bit-for-bit the reference path
+            assert pln.ondemand_syscalls == ref.ondemand_syscalls
+            assert pln.coalesced_ranges == 0
+            assert pln.coalesce_waste_bytes == 0
+        # the pure model predicts the real executor exactly
+        assert model_ondemand_io(ref, verts, gap) == (
+            pln.ondemand_syscalls,
+            pln.coalesced_ranges,
+            pln.coalesce_waste_bytes,
+        )
+
+
+@given(seed=st.integers(0, 10_000), gap=st.integers(0, 500))
+@settings(max_examples=25, deadline=None)
+def test_plan_reads_moves_the_extent_union(seed, gap):
+    """plan_reads covers every extent, never splits one, and its waste is
+    exactly total-minus-union — 0 at gap 0."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 40))
+    starts = np.sort(rng.integers(0, 2000, size=k))
+    ends = starts + rng.integers(0, 60, size=k)
+    plan = plan_reads(starts, ends, gap)
+    union = np.zeros(int(ends.max()) + 1 if k else 0, bool)
+    for s0, e0 in zip(starts, ends):
+        union[s0:e0] = True
+    covered = np.zeros_like(union)
+    for s0, e0 in plan.ranges:
+        covered[s0:e0] = True
+    assert covered[union].all()  # every useful byte is read
+    assert plan.useful_bytes == int(union.sum())
+    assert plan.waste_bytes == plan.total_bytes - plan.useful_bytes
+    if gap == 0:
+        assert plan.waste_bytes == 0  # only overlap/adjacency merges
+    for k_, (s0, e0) in enumerate(zip(starts, ends)):
+        r = int(plan.seg_range[k_])
+        if e0 == s0:
+            assert r == -1  # empty extents read nothing
+        else:
+            assert plan.ranges[r, 0] <= s0 and e0 <= plan.ranges[r, 1]
+
+
+@pytest.mark.parametrize("gap", [1, 4096, 1 << 20])
+def test_coalesced_walks_and_charges_bit_identical(small_blocked, disk_graph, gap):
+    """Engine gate: with the planner on, walks and every charged counter
+    except the syscall/range/waste gauges (and the coalesce-aware modelled
+    on-demand time) are identical to the gap-0 reference — on both
+    backends — and the disk run's real planner counters equal the charged
+    gauges when prefetch is off."""
+    task = rwnv_task(walks_per_vertex=2, length=10, seed=7)
+    ref = BiBlockEngine(small_blocked, task, loading="ondemand", prefetch=False).run()
+    try:
+        small_blocked.io_coalesce_gap = gap
+        r_ram = BiBlockEngine(small_blocked, task, loading="ondemand", prefetch=False).run()
+    finally:
+        small_blocked.io_coalesce_gap = 0  # session-scoped fixture
+    with DiskBlockedGraph(disk_graph, io_coalesce_gap=gap) as dg:
+        r_dsk = BiBlockEngine(dg, task, loading="ondemand", prefetch=False).run()
+        real = dg.counters()
+    for r in (r_ram, r_dsk):
+        np.testing.assert_array_equal(r.endpoint_counts, ref.endpoint_counts)
+        assert r.stats.ondemand_bytes == ref.stats.ondemand_bytes
+        assert r.stats.ondemand_ios == ref.stats.ondemand_ios
+        assert r.stats.ondemand_syscalls < ref.stats.ondemand_syscalls
+        assert r.stats.coalesced_ranges > 0
+    # the planner is backend-invariant: ram and disk charge identically
+    assert _strip_wall_clock(r_ram.stats) == _strip_wall_clock(r_dsk.stats)
+    # honest accounting: with prefetch off the real preads equal the gauges
+    assert real["ondemand_syscalls"] == r_dsk.stats.ondemand_syscalls
+    assert real["coalesced_ranges"] == r_dsk.stats.coalesced_ranges
+    assert real["coalesce_waste_bytes"] == r_dsk.stats.coalesce_waste_bytes
+    assert real["ondemand_bytes_read"] == r_dsk.stats.ondemand_bytes
+
+
+def test_schedule_batches_same_block_partials(small_blocked, disk_graph):
+    """BlockStore.schedule unions same-slot partial requests per block into
+    one prefetched build (one plan per block, not one per request)."""
+    from repro.core import IOStats
+
+    with DiskBlockedGraph(disk_graph) as dg:
+        store = BlockStore(dg, IOStats(), capacity=2, enable_prefetch=True)
+        s1 = int(dg.block_starts[1])
+        store.schedule([
+            ("partial", 1, np.array([s1, s1 + 2])),
+            ("partial", 1, np.array([s1 + 1, s1 + 2])),
+            ("full", 0),
+        ])
+        assert store.partial_prefetch_issued == 1
+        view = store.partial_view(1, np.array([s1, s1 + 1, s1 + 2]))
+        np.testing.assert_array_equal(view.vids, [s1, s1 + 1, s1 + 2])
+        assert store.partial_prefetch_hits == 1  # the union served as base
+        store.close()
 
 
 def test_blockstore_lru_hides_rereads(small_blocked, disk_graph):

@@ -77,6 +77,10 @@ def test_bench_smoke_runs_matrix_and_uploads_artifact(wf):
     # ... and so does the sharded-pool entry (identical CRCs + invariant
     # charges across pool_shards {1,2,4,8}, real per-shard writers)
     assert any("sharded_pool" in r and "--json" in r for r in runs)
+    # ... and the coalesced-I/O entry (gap-aware read planner: identical
+    # walks + charged useful bytes, strictly fewer on-demand syscalls,
+    # us_per_call at gap 0 / 4 KiB / 64 KiB in the report)
+    assert any("coalesced_io" in r and "--json" in r for r in runs)
     # ... and the fused-advance entry (pallas vs jax advance: identical walk
     # CRCs and charges, us_per_call for both impls in the report)
     assert any("fused_advance" in r and "--json" in r for r in runs)
